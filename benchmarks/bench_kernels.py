@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks: wall time of the jitted XLA reference
+path on CPU (the Pallas kernels are TPU-target; interpret mode is a
+correctness harness, not a performance surface), plus derived
+bandwidth estimates."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import aggregate_neighbors, bag_pool, mha, relax_rows
+
+
+def timeit(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main() -> list[str]:
+    rng = np.random.default_rng(0)
+    out = []
+
+    # relax_ell: SSSP hot loop
+    n_pad, R, W = 1 << 16, 1 << 16, 16
+    dist = jnp.concatenate([
+        jnp.asarray(rng.exponential(10, n_pad), jnp.float32),
+        jnp.array([jnp.inf]),
+    ])
+    col = jnp.asarray(rng.integers(0, n_pad, (R, W)), jnp.int32)
+    wgt = jnp.asarray(rng.uniform(1, 100, (R, W)), jnp.float32)
+    f = jax.jit(lambda d, c, w: relax_rows(d, c, w, impl="ref"))
+    us = timeit(f, dist, col, wgt)
+    edges_per_s = R * W / (us / 1e6)
+    out.append(f"kernel/relax_ell_64k_rows,{us:.1f},"
+               f"edges_per_s={edges_per_s:.3e}")
+
+    # spmm_ell: GNN aggregation
+    x = jnp.asarray(rng.normal(size=(n_pad, 64)), jnp.float32)
+    f = jax.jit(lambda x, c, w: aggregate_neighbors(
+        x, c, w, op="sum", impl="ref"))
+    us = timeit(f, x, col, wgt)
+    gb = R * W * 64 * 4 / 1e9
+    out.append(f"kernel/spmm_ell_64k_rows_d64,{us:.1f},"
+               f"gather_GBps={gb/(us/1e6):.1f}")
+
+    # flash attention (xla ref)
+    B, H, KV, S, D = 1, 8, 2, 1024, 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, D)), jnp.float32)
+    f = jax.jit(lambda q, k, v: mha(q, k, v, causal=True, impl="ref"))
+    us = timeit(f, q, k, v, iters=5)
+    fl = 4 * B * H * S * S * D / 2
+    out.append(f"kernel/attention_1k_h8,{us:.1f},"
+               f"gflops={fl/(us/1e6)/1e9:.1f}")
+
+    # embedding bag
+    V, d, Bb, L = 1 << 18, 64, 4096, 50
+    table = jnp.asarray(rng.normal(size=(V, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, V, (Bb, L)), jnp.int32)
+    mask = jnp.ones((Bb, L), bool)
+    f = jax.jit(lambda t, i, m: bag_pool(t, i, m, mode="mean",
+                                         impl="ref"))
+    us = timeit(f, table, idx, mask, iters=5)
+    out.append(f"kernel/embedding_bag_4k_bags,{us:.1f},"
+               f"lookups_per_s={Bb*L/(us/1e6):.3e}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,78 @@
+"""Paper Figures 5-7: Δ-stepping / KLA / Chaotic AGMs × EAGM variants
+(buffer, threadq, nodeq, numaq) on RMAT1 and RMAT2.
+
+The container cannot time a Cray, so each variant reports the
+work/synchronization quantities its wall-clock decomposes into
+(relaxations, commits, supersteps, exchange bytes) plus the calibrated
+cost model over 256 chips (metrics.model_time_s) — reproducing the
+*shape* of the paper's comparisons.  Runs on 8 placeholder devices in
+a subprocess so pod/device/chunk-scoped orderings are distinct.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+CHILD = r"""
+import json
+import numpy as np, jax
+from repro.graph import rmat1, rmat2, partition_1d
+from repro.core import (EngineConfig, run_distributed, make_policy,
+                        sssp_sources, dijkstra_reference, model_time_s)
+
+SCALE = %(scale)d
+rows = []
+for gname, gen in [("rmat1", rmat1), ("rmat2", rmat2)]:
+    g = gen(SCALE, seed=7)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    pg = partition_1d(g, 8)
+    ref = dijkstra_reference(g, 0)
+    for root in ["delta:3", "delta:5", "delta:7", "kla:1", "kla:2",
+                 "kla:3", "chaotic"]:
+        for variant in ["buffer", "threadq", "nodeq", "numaq"]:
+            pol = make_policy(root, variant, chunk_size=256)
+            cfg = EngineConfig(policy=pol, exchange="a2a")
+            d, m = run_distributed(pg, mesh, cfg, sssp_sources(0))
+            ok = np.allclose(np.where(np.isinf(ref), -1, ref),
+                             np.where(np.isinf(d), -1, d))
+            rows.append(dict(
+                graph=gname, scale=SCALE, root=root, variant=variant,
+                ok=bool(ok), model_ms=model_time_s(m, 256) * 1e3,
+                **m.as_dict()))
+print(json.dumps(rows))
+"""
+
+
+def run(scale: int = 10) -> list:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", CHILD % {"scale": scale}], env=env,
+        capture_output=True, text=True, timeout=3000,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-3000:])
+    return json.loads(r.stdout.splitlines()[-1])
+
+
+def main(scale: int = 10) -> list[str]:
+    rows = run(scale)
+    out = []
+    for r in rows:
+        assert r["ok"], r
+        name = f"fig5-7/{r['graph']}_s{r['scale']}/{r['root']}+{r['variant']}"
+        derived = (
+            f"relax={r['relaxations']};steps={r['supersteps']};"
+            f"commits={r['commits']};xbytes={r['exchange_bytes']}"
+        )
+        out.append(f"{name},{r['model_ms']*1e3:.1f},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,35 @@
+"""Benchmark harness entry point: one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV lines.  The suites:
+
+  fig5-7/     Δ/KLA/Chaotic × EAGM variants, RMAT1+RMAT2 (Figs 5-7)
+  table1/     real-world-shaped graphs × variants       (Table I)
+  weakscale/  per-rank-constant scaling P=1..8          (§VI-A)
+  kernel/     Pallas-target kernel hot loops (XLA ref timings)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import (
+        bench_kernels, bench_scaling, bench_table1, bench_variants,
+    )
+
+    lines = ["name,us_per_call,derived"]
+    lines += bench_kernels.main()
+    lines += bench_variants.main(scale=9 if fast else 10)
+    if not fast:
+        lines += bench_table1.main()
+        lines += bench_scaling.main()
+    for ln in lines:
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

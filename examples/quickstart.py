@@ -1,0 +1,69 @@
+"""Quickstart: the paper in five minutes.
+
+Builds a Graph500-style R-MAT graph, runs the self-stabilizing SSSP
+kernel three ways — (1) the literal Algorithm 1 synchronous sweep,
+(2) the logical AGM (Definition 3 semantics), (3) the distributed
+EAGM engine — and shows that orderings trade work for synchronization
+exactly as the paper claims.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    EngineConfig, dijkstra_reference, make_ordering, make_policy,
+    model_time_s, run_distributed, run_logical, sssp_agm, sssp_sources,
+)
+from repro.core.selfstab import synchronous_sweep
+from repro.graph import partition_1d, rmat1
+from repro.launch.mesh import make_cpu_topology
+
+
+def main():
+    g = rmat1(11, seed=0)
+    print(f"graph: {g.name}  |V|={g.n}  |E|={g.m}")
+    ref = dijkstra_reference(g, 0)
+    reach = int(np.isfinite(ref).sum())
+    print(f"oracle: {reach}/{g.n} vertices reachable from 0\n")
+
+    # 1. the self-stabilizing kernel itself (Algorithm 1), started
+    #    from a CORRUPTED state — it still stabilizes.
+    rng = np.random.default_rng(0)
+    d0 = rng.uniform(0, 100, g.n).astype(np.float32)
+    d = synchronous_sweep(g, 0, d0, iters=600)
+    ok = np.allclose(np.where(np.isinf(ref), -1, ref),
+                     np.where(np.isinf(d), -1, d))
+    print(f"[1] self-stabilizing sweep from random state: "
+          f"{'stabilized correctly' if ok else 'FAILED'}")
+
+    # 2. the logical AGM: ordering => equivalence classes => less work
+    print("\n[2] logical AGM (Definition 3): ordering vs work")
+    for spec in ["chaotic", "delta:20", "dijkstra"]:
+        dist, m = run_logical(sssp_agm(g, 0, make_ordering(spec)))
+        assert np.allclose(np.where(np.isinf(ref), -1, ref),
+                           np.where(np.isinf(dist), -1, dist))
+        print(f"    {spec:9s} classes={m.classes:5d} "
+              f"relaxations={m.relaxations:8d} commits={m.commits}")
+
+    # 3. the distributed EAGM engine (same code the 512-chip dry-run
+    #    lowers), with the paper's best variant
+    print("\n[3] distributed EAGM engine")
+    topo = make_cpu_topology()
+    pg = partition_1d(g, topo.n_devices)
+    for root, variant in [("delta:20", "buffer"),
+                          ("chaotic", "threadq")]:
+        cfg = EngineConfig(policy=make_policy(root, variant,
+                                              chunk_size=512))
+        dist, m = run_distributed(pg, topo.mesh, cfg, sssp_sources(0))
+        assert np.allclose(np.where(np.isinf(ref), -1, ref),
+                           np.where(np.isinf(dist), -1, dist))
+        print(f"    {root:9s}+{variant:8s} supersteps={m.supersteps:4d} "
+              f"relax={m.relaxations:8d} "
+              f"cost-model(256 chips)={model_time_s(m, 256)*1e3:6.2f} ms")
+    print("\nall three layers agree with Dijkstra — see DESIGN.md "
+          "for how the EAGM hierarchy maps to a TPU pod")
+
+
+if __name__ == "__main__":
+    main()

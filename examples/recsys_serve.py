@@ -1,0 +1,54 @@
+"""MIND serving example: train briefly on synthetic interactions,
+then serve batched retrieval requests (the retrieval_cand cell's
+compute pattern at laptop scale).
+
+    PYTHONPATH=src python examples/recsys_serve.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import mind_batch
+from repro.models import mind
+from repro.train import (
+    AdamWConfig, TrainConfig, build_train_step, init_train_state,
+)
+
+
+def main():
+    cfg = get_arch("mind").make_config(reduced=True)
+    key = jax.random.PRNGKey(0)
+    p = mind.init_params(key, cfg)
+    tc = TrainConfig(adamw=AdamWConfig(lr=1e-2), warmup_steps=5,
+                     total_steps=60)
+    fn = jax.jit(build_train_step(
+        lambda pp, b: mind.sampled_softmax_loss(pp, b, cfg), tc))
+    st = init_train_state(p, tc)
+    for i in range(60):
+        b = {k: jnp.asarray(v) for k, v in mind_batch(i, 64, cfg).items()}
+        p, st, m = fn(p, st, b, jnp.int32(i))
+        if i % 20 == 0:
+            print(f"train step {i:3d} loss={float(m['loss']):.4f}")
+
+    # batched retrieval serving: score every item for a request batch
+    serve = jax.jit(lambda pp, b, c: mind.retrieval_scores(pp, b, c, cfg))
+    cand = jnp.arange(cfg.n_items, dtype=jnp.int32)
+    reqs = {k: jnp.asarray(v) for k, v in mind_batch(999, 32, cfg).items()}
+    t0 = time.perf_counter()
+    scores = serve(p, reqs, cand)
+    scores.block_until_ready()
+    dt = time.perf_counter() - t0
+    top = jnp.argsort(-scores, axis=1)[:, :5]
+    print(f"\nserved 32 requests x {cfg.n_items} candidates in "
+          f"{dt*1e3:.1f} ms (incl. compile)")
+    print("top-5 items for first 3 users:")
+    for u in range(3):
+        print(f"  user {u}: {np.asarray(top[u])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Inject the final roofline table + perf summary into EXPERIMENTS.md
+(run after the full dry-run sweep).
+
+    PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+
+import glob
+import json
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline import from_record  # noqa: E402
+
+
+def table(mesh: str) -> str:
+    rows = []
+    for f in sorted(glob.glob(f"experiments/dryrun/*__{mesh}.json")):
+        rec = json.load(open(f))
+        if not rec.get("ok"):
+            rows.append(f"| {rec['arch']} | {rec['cell']} | FAILED |")
+            continue
+        r = from_record(rec)
+        mem_gb = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+        arg_gb = rec["memory"].get("argument_size_in_bytes", 0) / 1e9
+
+        def fm(x):
+            return f"{x:.2e}" if (x != 0 and (x < 1e-3 or x >= 1e4)) \
+                else f"{x:.4f}"
+
+        rows.append(
+            f"| {r.arch} | {r.cell} | {fm(r.t_compute)} | "
+            f"{fm(r.t_memory)} | {fm(r.t_collective)} | {r.dominant} | "
+            f"{r.useful_ratio:.3f} | {r.roofline_fraction:.4f} | "
+            f"{mem_gb:.1f} | {arg_gb:.2f} |"
+        )
+    hdr = ("| arch | cell | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "dominant | useful | frac | temp GB/dev | args GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def perf_summary() -> str:
+    def load(path):
+        rec = json.load(open(path))
+        r = from_record(rec)
+        return rec, r
+
+    lines = [
+        "| cell | metric | before | after | gain |",
+        "|---|---|---|---|---|",
+    ]
+    # H1
+    b, rb = load("experiments/perf_iter0_minicpm3_prefill.json")
+    a, ra = load(
+        "experiments/dryrun/minicpm3-4b__prefill_32k__pod16x16.json"
+    )
+    lines.append(
+        f"| minicpm3 prefill_32k | t_coll (s) | {rb.t_collective:.1f} "
+        f"| {ra.t_collective:.2f} | "
+        f"{rb.t_collective/max(ra.t_collective,1e-9):.0f}x |"
+    )
+    lines.append(
+        f"| minicpm3 prefill_32k | temp GB/dev | "
+        f"{b['memory']['temp_size_in_bytes']/1e9:.0f} | "
+        f"{a['memory']['temp_size_in_bytes']/1e9:.0f} | "
+        f"{b['memory']['temp_size_in_bytes']/max(a['memory']['temp_size_in_bytes'],1):.0f}x |"
+    )
+    # H2
+    b, rb = load("experiments/perf_dimenet/baseline.json")
+    a, ra = load("experiments/dryrun/dimenet__ogb_products__pod16x16.json")
+    lines.append(
+        f"| dimenet ogb_products | t_coll (s) | {rb.t_collective:.2f} "
+        f"| {ra.t_collective:.2f} | "
+        f"{rb.t_collective/max(ra.t_collective,1e-9):.2f}x |"
+    )
+    # H3
+    b, rb = load(
+        "experiments/dryrun/sssp__rmat26_delta_buffer_pmin__pod16x16.json"
+    )
+    a, ra = load(
+        "experiments/dryrun/sssp__rmat26_delta_buffer_a2a__pod16x16.json"
+    )
+    lines.append(
+        f"| sssp Δ-stepping exchange | coll bytes/superstep/dev | "
+        f"{b['collectives']['total_bytes']/1e6:.0f} MB | "
+        f"{a['collectives']['total_bytes']/1e6:.0f} MB | "
+        f"{b['collectives']['total_bytes']/max(a['collectives']['total_bytes'],1):.2f}x |"
+    )
+    return "\n".join(lines)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->", table("pod16x16"))
+    text = text.replace("<!-- PERF_SUMMARY -->", perf_summary())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    with open("experiments/roofline_single.md", "w") as f:
+        f.write(table("pod16x16"))
+    with open("experiments/roofline_multi.md", "w") as f:
+        f.write(table("pod2x16x16"))
+    print("EXPERIMENTS.md finalized")
+
+
+if __name__ == "__main__":
+    main()

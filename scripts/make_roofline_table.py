@@ -1,0 +1,56 @@
+"""Generate the EXPERIMENTS.md §Roofline table from dry-run records.
+
+    PYTHONPATH=src python scripts/make_roofline_table.py [--mesh pod16x16]
+"""
+
+import argparse
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline import from_record  # noqa: E402
+
+
+def fmt(x, digits=4):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{digits}f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted(glob.glob(f"{args.dir}/*__{args.mesh}.json")):
+        rec = json.load(open(f))
+        if not rec.get("ok"):
+            rows.append((rec["arch"], rec["cell"], "FAILED"))
+            continue
+        r = from_record(rec)
+        mem_gb = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+        arg_gb = rec["memory"].get("argument_size_in_bytes", 0) / 1e9
+        rows.append((
+            r.arch, r.cell, fmt(r.t_compute), fmt(r.t_memory),
+            fmt(r.t_collective), r.dominant, fmt(r.useful_ratio, 3),
+            fmt(r.roofline_fraction, 4), f"{mem_gb:.1f}",
+            f"{arg_gb:.2f}",
+        ))
+
+    hdr = ("| arch | cell | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "dominant | useful | frac | temp GB/dev | args GB/dev |")
+    sep = "|" + "---|" * 10
+    print(hdr)
+    print(sep)
+    for r in rows:
+        print("| " + " | ".join(str(x) for x in r) + " |")
+
+
+if __name__ == "__main__":
+    main()

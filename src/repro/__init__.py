@@ -1,0 +1,8 @@
+"""repro: AGM/EAGM distributed graph algorithms (Kanewala et al. 2017)
+as a multi-pod JAX framework, plus the assigned architecture zoo.
+
+Subpackages: core (the paper), graph, kernels (Pallas), models,
+train, data, configs (--arch registry), launch, roofline.
+"""
+
+__version__ = "1.0.0"

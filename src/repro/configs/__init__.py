@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Ten assigned architectures + the paper's own SSSP workload.  Each
+module exposes ARCH_ID, FAMILY, SHAPES, make_config(reduced) and
+make_cell(cell, topo, reduced).
+"""
+
+from repro.configs import (
+    dbrx,
+    dimenet_cfg,
+    egnn_cfg,
+    gin_tu,
+    mace_cfg,
+    mind_cfg,
+    minicpm3,
+    minitron,
+    phi35_moe,
+    phi3_mini,
+    sssp_cfg,
+)
+
+_MODULES = [
+    phi35_moe, dbrx, phi3_mini, minitron, minicpm3,
+    mace_cfg, gin_tu, egnn_cfg, dimenet_cfg,
+    mind_cfg, sssp_cfg,
+]
+
+REGISTRY = {m.ARCH_ID: m for m in _MODULES}
+ASSIGNED = [m.ARCH_ID for m in _MODULES if m.ARCH_ID != "sssp"]
+
+
+def get_arch(arch_id: str):
+    if arch_id not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(REGISTRY)}"
+        )
+    return REGISTRY[arch_id]
+
+
+def list_cells(arch_id: str) -> list:
+    return list(get_arch(arch_id).SHAPES)
+
+
+def all_cells(include_sssp: bool = True) -> list:
+    out = []
+    for m in _MODULES:
+        if m.ARCH_ID == "sssp" and not include_sssp:
+            continue
+        for c in m.SHAPES:
+            out.append((m.ARCH_ID, c))
+    return out

@@ -1,0 +1,542 @@
+"""Cell machinery: an (architecture × input-shape) cell is a concrete
+jittable program + abstract inputs + shardings + useful-FLOPs formula.
+
+The multi-pod dry-run lowers/compiles every cell on the production
+mesh; the roofline package reads each compiled cell's cost analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import Topology
+from repro.models import lm as lm_mod
+from repro.train import (
+    AdamWConfig, TrainConfig, build_train_step, init_state, state_specs,
+)
+
+
+@dataclasses.dataclass
+class CellProgram:
+    arch: str
+    cell: str
+    kind: str                      # train | prefill | decode | serve
+    fn: Callable
+    args: tuple                    # abstract (ShapeDtypeStruct) pytrees
+    in_shardings: Any              # matching pytree of NamedSharding
+    out_shardings: Any = None      # optional pytree for outputs
+    donate_argnums: tuple = ()
+    model_flops: float = 0.0       # useful FLOPs per execution
+    notes: str = ""
+
+    def lower(self):
+        kw = {}
+        if self.out_shardings is not None:
+            kw["out_shardings"] = self.out_shardings
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            donate_argnums=self.donate_argnums,
+            **kw,
+        )
+        return jitted.lower(*self.args)
+
+
+def named(topo: Topology, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(topo.mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_init(fn, *args, **kwargs):
+    """eval_shape with abstract-array args passed positionally (static
+    config objects go through the closure untouched)."""
+    arr_like = tuple(
+        a for a in args
+        if isinstance(a, (jax.Array, jax.ShapeDtypeStruct, dict, list,
+                          tuple))
+    )
+    static = tuple(
+        a for a in args
+        if not isinstance(a, (jax.Array, jax.ShapeDtypeStruct, dict,
+                              list, tuple))
+    )
+
+    def wrapped(*arrs):
+        it = iter(arrs)
+        full = [
+            next(it) if isinstance(a, (jax.Array, jax.ShapeDtypeStruct,
+                                       dict, list, tuple)) else a
+            for a in args
+        ]
+        return fn(*full, **kwargs)
+
+    del static
+    return jax.eval_shape(wrapped, *arr_like)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ------------------------------------------------------------------ #
+# LM cells
+
+
+def lm_flops_train(cfg: lm_mod.LMConfig, B: int, S: int) -> float:
+    """6·N_active·tokens + attention score/value terms (fwd+bwd)."""
+    n = cfg.n_active_params()
+    attn = 12 * cfg.n_layers * B * S * S * cfg.n_heads * cfg.head_dim
+    if cfg.attn_type == "mla":
+        attn = 12 * cfg.n_layers * B * S * S * cfg.n_heads * (
+            cfg.qk_nope_dim + cfg.qk_rope_dim + cfg.v_head_dim
+        ) / 2
+    return 6.0 * n * B * S + attn
+
+
+def lm_flops_prefill(cfg: lm_mod.LMConfig, B: int, S: int) -> float:
+    n = cfg.n_active_params()
+    attn = 2 * cfg.n_layers * B * S * S * cfg.n_heads * cfg.head_dim
+    return 2.0 * n * B * S + attn
+
+
+def lm_flops_decode(cfg: lm_mod.LMConfig, B: int, S_ctx: int) -> float:
+    n = cfg.n_active_params()
+    if cfg.attn_type == "mla":
+        # absorbed decode: scores/context against the latent cache
+        attn = 4 * cfg.n_layers * B * S_ctx * cfg.n_heads * (
+            cfg.kv_lora_rank + cfg.qk_rope_dim
+        )
+    else:
+        attn = 4 * cfg.n_layers * B * S_ctx * cfg.n_heads * cfg.head_dim
+    return 2.0 * n * B + attn
+
+
+def lm_train_cell(arch: str, cell: str, cfg: lm_mod.LMConfig,
+                  topo: Topology, B: int, S: int) -> CellProgram:
+    tc = TrainConfig(adamw=AdamWConfig())
+    params = abstract_init(lm_mod.init_params, jax.random.PRNGKey(0), cfg)
+    opt = abstract_init(init_state, params, tc.adamw)
+    pspecs = lm_mod.param_specs(cfg, topo)
+    ospecs = state_specs(pspecs, tc.adamw)
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    bspecs = {"tokens": topo.spec("dp", None), "labels": topo.spec("dp", None)}
+
+    step = build_train_step(
+        lambda p, b: lm_mod.lm_loss(p, b, cfg, topo), tc
+    )
+    return CellProgram(
+        arch=arch, cell=cell, kind="train", fn=step,
+        args=(params, opt, batch, sds((), jnp.int32)),
+        in_shardings=(
+            named(topo, pspecs), named(topo, ospecs),
+            named(topo, bspecs), NamedSharding(topo.mesh, P()),
+        ),
+        donate_argnums=(0, 1),
+        model_flops=lm_flops_train(cfg, B, S),
+        notes=f"B={B} S={S} params={cfg.n_params()/1e9:.1f}B",
+    )
+
+
+def lm_prefill_cell(arch: str, cell: str, cfg: lm_mod.LMConfig,
+                    topo: Topology, B: int, S: int) -> CellProgram:
+    params = abstract_init(lm_mod.init_params, jax.random.PRNGKey(0), cfg)
+    pspecs = lm_mod.param_specs(cfg, topo)
+    tokens = sds((B, S), jnp.int32)
+
+    def fn(p, t):
+        return lm_mod.prefill_step(p, t, cfg, topo, max_len=S)
+
+    # §Perf iteration 1: without explicit output shardings XLA chose a
+    # REPLICATED cache output (0.2-1.4 TB temp per device); pin the
+    # cache to the decode layout it feeds.
+    cspecs = lm_mod.cache_specs(cfg, topo, long=False)
+    return CellProgram(
+        arch=arch, cell=cell, kind="prefill", fn=fn,
+        args=(params, tokens),
+        in_shardings=(
+            named(topo, pspecs),
+            NamedSharding(topo.mesh, topo.spec("dp", None)),
+        ),
+        out_shardings=(
+            named(topo, cspecs),
+            NamedSharding(topo.mesh, topo.spec("dp", "tp")),
+        ),
+        model_flops=lm_flops_prefill(cfg, B, S),
+        notes=f"B={B} S={S}",
+    )
+
+
+def lm_decode_cell(arch: str, cell: str, cfg: lm_mod.LMConfig,
+                   topo: Topology, B: int, S_ctx: int,
+                   long: bool) -> CellProgram:
+    params = abstract_init(lm_mod.init_params, jax.random.PRNGKey(0), cfg)
+    pspecs = lm_mod.param_specs(cfg, topo)
+    cache = lm_mod.cache_shapes(cfg, B, S_ctx)
+    cspecs = lm_mod.cache_specs(cfg, topo, long=long)
+    tokens = sds((B,), jnp.int32)
+    tok_spec = P() if long else topo.spec("dp")
+
+    def fn(p, c, t, pos):
+        return lm_mod.decode_step(p, c, t, pos, cfg, topo)
+
+    logits_spec = P() if long else topo.spec("dp", "tp")
+    return CellProgram(
+        arch=arch, cell=cell, kind="decode", fn=fn,
+        args=(params, cache, tokens, sds((), jnp.int32)),
+        in_shardings=(
+            named(topo, pspecs), named(topo, cspecs),
+            NamedSharding(topo.mesh, tok_spec),
+            NamedSharding(topo.mesh, P()),
+        ),
+        out_shardings=(
+            NamedSharding(topo.mesh, logits_spec),
+            named(topo, cspecs),
+        ),
+        donate_argnums=(1,),
+        model_flops=lm_flops_decode(cfg, B, S_ctx),
+        notes=f"B={B} S_ctx={S_ctx}" + (" SP-decode" if long else ""),
+    )
+
+
+# LM shape cells shared by all five assigned transformer archs
+LM_SHAPES = {
+    "train_4k": dict(kind="train", S=4096, B=256),
+    "prefill_32k": dict(kind="prefill", S=32768, B=32),
+    "decode_32k": dict(kind="decode", S=32768, B=128),
+    "long_500k": dict(kind="decode", S=524288, B=1, long=True),
+}
+
+
+def lm_cell(arch: str, cfg: lm_mod.LMConfig, cell: str,
+            topo: Topology, probe_layers: Optional[int] = None
+            ) -> CellProgram:
+    """``probe_layers`` builds a depth-L *unrolled* probe variant of
+    the cell: XLA's cost model counts a lax.scan body once regardless
+    of trip count, so probes unroll layers into straight-line HLO and
+    the roofline reconstructs true totals from two probes (L=1, L=2):
+    total = f(1) + (n_layers - 1) · (f(2) - f(1))."""
+    if probe_layers is not None:
+        cfg = dataclasses.replace(
+            cfg, n_layers=probe_layers, scan_layers=False
+        )
+    sh = LM_SHAPES[cell]
+    if sh["kind"] == "train":
+        return lm_train_cell(arch, cell, cfg, topo, sh["B"], sh["S"])
+    if sh["kind"] == "prefill":
+        return lm_prefill_cell(arch, cell, cfg, topo, sh["B"], sh["S"])
+    return lm_decode_cell(
+        arch, cell, cfg, topo, sh["B"], sh["S"], sh.get("long", False)
+    )
+
+
+# ------------------------------------------------------------------ #
+# GNN cells
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n=2708, e=10556, d_feat=1433, classes=7),
+    "minibatch_lg": dict(
+        seeds=1024, fanouts=(15, 10), d_feat=602, classes=41,
+        n=169984, e=168960,  # padded block sizes for the fanout
+    ),
+    "ogb_products": dict(n=2449029, e=61859140, d_feat=100, classes=47),
+    "molecule": dict(batch=128, n=30, e=64, d_feat=10, triplet_pad=512),
+}
+
+
+_PAD = 512  # lcm of both production meshes' device counts
+
+
+def _pad_up(x: int, m: int = _PAD) -> int:
+    return -(-x // m) * m
+
+
+def gnn_flat_batch_shapes(sh: dict, *, coords: bool, triplets: bool,
+                          tri_cap: int = 2) -> dict:
+    """Node/edge/triplet counts are padded up to a multiple of the
+    device count (jit in_shardings need even shards); padded entries
+    carry mask=False and the models multiply messages by the mask."""
+    n, e = _pad_up(sh["n"]), _pad_up(sh["e"])
+    batch = {
+        "x": sds((n, sh["d_feat"]), jnp.float32),
+        "edge_src": sds((e,), jnp.int32),
+        "edge_dst": sds((e,), jnp.int32),
+        "edge_mask": sds((e,), jnp.bool_),
+        "labels": sds((n,), jnp.int32),
+    }
+    if coords:
+        batch["coords"] = sds((n, 3), jnp.float32)
+    if triplets:
+        t = _pad_up(e * tri_cap)
+        batch["tri_kj"] = sds((t,), jnp.int32)
+        batch["tri_ji"] = sds((t,), jnp.int32)
+        batch["tri_mask"] = sds((t,), jnp.bool_)
+    return batch
+
+
+def gnn_flat_specs(topo: Topology, batch: dict) -> dict:
+    """Nodes/edges/triplets shard over the whole mesh (uneven shards
+    are fine under jit/GSPMD)."""
+    allax = topo.all_axes
+    specs = {}
+    for k, v in batch.items():
+        specs[k] = P(allax, *([None] * (len(v.shape) - 1)))
+    return specs
+
+
+def gnn_packed_specs(topo: Topology, batch: dict) -> dict:
+    """Molecule batch (128 graphs) shards over the dp axes."""
+    return {
+        k: P(topo.dp, *([None] * (len(v.shape) - 1)))
+        for k, v in batch.items()
+    }
+
+
+def gnn_packed_batch_shapes(sh: dict, *, triplets: bool) -> dict:
+    b, n, e = sh["batch"], sh["n"], sh["e"]
+    batch = {
+        "x": sds((b, n, sh["d_feat"]), jnp.float32),
+        "coords": sds((b, n, 3), jnp.float32),
+        "edge_src": sds((b, e), jnp.int32),
+        "edge_dst": sds((b, e), jnp.int32),
+        "edge_mask": sds((b, e), jnp.bool_),
+        "y": sds((b,), jnp.float32),
+    }
+    if triplets:
+        t = sh["triplet_pad"]
+        batch["tri_kj"] = sds((b, t), jnp.int32)
+        batch["tri_ji"] = sds((b, t), jnp.int32)
+        batch["tri_mask"] = sds((b, t), jnp.bool_)
+    return batch
+
+
+def gnn_train_cell(arch: str, cell: str, loss_fn, init_fn, mcfg,
+                   topo: Topology, *, coords: bool, triplets: bool,
+                   model_flops: float) -> CellProgram:
+    sh = GNN_SHAPES[cell]
+    tc = TrainConfig(adamw=AdamWConfig())
+    params = abstract_init(init_fn, jax.random.PRNGKey(0), mcfg)
+    opt = abstract_init(init_state, params, tc.adamw)
+    rep = jax.tree_util.tree_map(lambda _: P(), params)
+    ospecs = state_specs(rep, tc.adamw)
+    if cell == "molecule":
+        batch = gnn_packed_batch_shapes(sh, triplets=triplets)
+        bspecs = gnn_packed_specs(topo, batch)
+    else:
+        batch = gnn_flat_batch_shapes(
+            sh, coords=coords, triplets=triplets
+        )
+        bspecs = gnn_flat_specs(topo, batch)
+
+    if cell != "molecule":
+        # §Perf: pin segment-reduce outputs to the mesh-sharded layout
+        # and enable owner-aligned local scatters for dst-sorted index
+        # lists (dimenet triplets)
+        from repro.models.gnn.layers import (
+            aligned_scatter, segment_output_sharding,
+        )
+
+        seg_sh = NamedSharding(topo.mesh, P(topo.all_axes))
+
+        def sharded_loss(p, b):
+            with segment_output_sharding(seg_sh), aligned_scatter(topo):
+                return loss_fn(p, b, mcfg)
+    else:
+        def sharded_loss(p, b):
+            return loss_fn(p, b, mcfg)
+
+    step = build_train_step(sharded_loss, tc)
+    return CellProgram(
+        arch=arch, cell=cell, kind="train", fn=step,
+        args=(params, opt, batch, sds((), jnp.int32)),
+        in_shardings=(
+            named(topo, rep), named(topo, ospecs), named(topo, bspecs),
+            NamedSharding(topo.mesh, P()),
+        ),
+        donate_argnums=(0, 1),
+        model_flops=model_flops,
+        notes=f"{cell}: " + ", ".join(f"{k}={v}" for k, v in sh.items()),
+    )
+
+
+# ------------------------------------------------------------------ #
+# recsys (MIND) cells
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", B=65536),
+    "serve_p99": dict(kind="serve", B=512),
+    "serve_bulk": dict(kind="serve", B=262144),
+    "retrieval_cand": dict(kind="retrieval", B=1, n_candidates=1_000_000),
+}
+
+
+def mind_batch_shapes(cfg, B: int, *, with_labels: bool) -> dict:
+    F = cfg.n_profile_fields * cfg.profile_multi
+    batch = {
+        "hist": sds((B, cfg.hist_len), jnp.int32),
+        "hist_mask": sds((B, cfg.hist_len), jnp.bool_),
+        "profile_ids": sds((B, F), jnp.int32),
+        "profile_mask": sds((B, F), jnp.bool_),
+    }
+    if with_labels:
+        batch["target"] = sds((B,), jnp.int32)
+        batch["negatives"] = sds((B, cfg.n_negatives), jnp.int32)
+    return batch
+
+
+def mind_batch_specs(topo: Topology, batch: dict, B: int) -> dict:
+    ax = topo.all_axes if B % topo.n_devices == 0 else (
+        topo.dp if B % topo.dp_size == 0 else None
+    )
+    return {
+        k: P(ax, *([None] * (len(v.shape) - 1)))
+        for k, v in batch.items()
+    }
+
+
+def mind_param_specs(cfg, topo: Topology) -> dict:
+    """Embedding tables row-sharded over the whole mesh (the huge-
+    sparse-table layout); small dense params replicated."""
+    allax = topo.all_axes
+    return {
+        "item_table": P(allax, None),
+        "profile_table": P(allax, None),
+        "bilinear": P(),
+        "routing_init": P(),
+        "interest_mlp": {
+            k: P() for k in ("w0", "w1", "b0", "b1")
+        },
+    }
+
+
+def mind_flops(cfg, B: int, kind: str, n_candidates: int = 0) -> float:
+    d, K, L = cfg.embed_dim, cfg.n_interests, cfg.hist_len
+    routing = 2 * cfg.capsule_iters * 2 * B * L * K * d + 2 * B * L * d * d
+    mlp = 2 * B * K * (2 * d * d + d * d)
+    fwd = routing + mlp
+    if kind == "train":
+        return 3 * fwd + 6 * B * (1 + cfg.n_negatives) * d
+    if kind == "retrieval":
+        return fwd + 2 * B * K * n_candidates * d
+    return fwd
+
+
+def mind_cell(arch: str, cell: str, cfg, topo: Topology) -> CellProgram:
+    from repro.models import mind as mind_mod
+
+    sh = RECSYS_SHAPES[cell]
+    B = sh["B"]
+    params = abstract_init(mind_mod.init_params, jax.random.PRNGKey(0), cfg)
+    pspecs = mind_param_specs(cfg, topo)
+
+    if sh["kind"] == "train":
+        tc = TrainConfig(adamw=AdamWConfig())
+        opt = abstract_init(init_state, params, tc.adamw)
+        ospecs = state_specs(pspecs, tc.adamw)
+        batch = mind_batch_shapes(cfg, B, with_labels=True)
+        bspecs = mind_batch_specs(topo, batch, B)
+        step = build_train_step(
+            lambda p, b: mind_mod.sampled_softmax_loss(p, b, cfg), tc
+        )
+        return CellProgram(
+            arch=arch, cell=cell, kind="train", fn=step,
+            args=(params, opt, batch, sds((), jnp.int32)),
+            in_shardings=(
+                named(topo, pspecs), named(topo, ospecs),
+                named(topo, bspecs), NamedSharding(topo.mesh, P()),
+            ),
+            donate_argnums=(0, 1),
+            model_flops=mind_flops(cfg, B, "train"),
+            notes=f"B={B}",
+        )
+
+    batch = mind_batch_shapes(cfg, B, with_labels=False)
+    bspecs = mind_batch_specs(topo, batch, B)
+    if sh["kind"] == "retrieval":
+        nc = sh["n_candidates"]
+        cand = sds((nc,), jnp.int32)
+
+        def fn(p, b, c):
+            return mind_mod.retrieval_scores(p, b, c, cfg)
+
+        return CellProgram(
+            arch=arch, cell=cell, kind="serve", fn=fn,
+            args=(params, batch, cand),
+            in_shardings=(
+                named(topo, pspecs), named(topo, bspecs),
+                NamedSharding(topo.mesh, P(topo.dp)),
+            ),
+            model_flops=mind_flops(cfg, B, "retrieval", nc),
+            notes=f"B={B} n_candidates={nc}",
+        )
+
+    def fn(p, b):
+        return mind_mod.serve_interests(p, b, cfg)
+
+    return CellProgram(
+        arch=arch, cell=cell, kind="serve", fn=fn,
+        args=(params, batch),
+        in_shardings=(named(topo, pspecs), named(topo, bspecs)),
+        model_flops=mind_flops(cfg, B, "serve"),
+        notes=f"B={B}",
+    )
+
+
+# ------------------------------------------------------------------ #
+# SSSP (the paper's own workload) cells
+
+
+def sssp_cell(arch: str, cell: str, topo: Topology, *,
+              scale: int, avg_degree: int, width: int,
+              root: str, variant: str, exchange: str) -> CellProgram:
+    """Abstract partitioned-graph SSSP solve on the production mesh.
+    Shapes derive from (scale, avg_degree, width) without building
+    the graph: rows/rank ~ n_local * ceil(avg_deg/width) * safety."""
+    from repro.core import EngineConfig, make_engine, make_policy
+    from repro.core.engine import build_step  # noqa: F401 (doc link)
+
+    P_ = topo.n_devices
+    n = 1 << scale
+    n_local = -(-n // P_)
+    n_pad = n_local * P_
+    # virtual rows per rank: ceil(deg/width) summed ~ e/width + n_local
+    rows = int(1.3 * (n_local * avg_degree / width + n_local))
+    pol = make_policy(root, variant, chunk_size=4096)
+    ecfg = EngineConfig(policy=pol, exchange=exchange,
+                        collect_metrics=True)
+    solve = make_engine(dict(n_parts=P_, n_local=n_local), topo.mesh, ecfg)
+
+    args = (
+        sds((P_, rows), jnp.int32),
+        sds((P_, rows, width), jnp.int32),
+        sds((P_, rows, width), jnp.float32),
+        sds((P_, n_local + 1), jnp.float32),
+        sds((P_, n_local + 1), jnp.float32),
+        sds((P_, n_local + 1), jnp.float32),
+    )
+    shard = NamedSharding(topo.mesh, P(topo.all_axes))
+    # per-superstep useful flops: relax (2 flops/edge) + scatter+min
+    flops_per_step = 3.0 * n * avg_degree / 1.0
+    return CellProgram(
+        arch=arch, cell=cell, kind="sssp", fn=solve,
+        args=args,
+        in_shardings=(shard,) * 6,
+        model_flops=flops_per_step,
+        notes=(
+            f"scale={scale} deg={avg_degree} W={width} "
+            f"{root}+{variant} exchange={exchange} (flops = one superstep)"
+        ),
+    )

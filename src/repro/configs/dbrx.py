@@ -1,0 +1,36 @@
+"""dbrx-132b [hf:databricks/dbrx-base].
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352, MoE 16e top-4
+(fine-grained experts).
+"""
+
+from repro.configs.cells import LM_SHAPES, lm_cell
+from repro.models.lm import LMConfig
+from repro.models.moe import MoEConfig
+
+ARCH_ID = "dbrx-132b"
+FAMILY = "lm"
+SHAPES = list(LM_SHAPES)
+
+
+def make_config(reduced: bool = False) -> LMConfig:
+    if reduced:
+        return LMConfig(
+            name=ARCH_ID + "-reduced", n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=2, d_ff=96, vocab=211,
+            param_dtype="float32", loss_chunk=8,
+            moe=MoEConfig(n_experts=4, top_k=4, d_model=64, d_ff=96,
+                          capacity_factor=2.0, min_capacity=16),
+        )
+    return LMConfig(
+        name=ARCH_ID, n_layers=40, d_model=6144, n_heads=48,
+        n_kv_heads=8, d_ff=10752, vocab=100352,
+        moe=MoEConfig(n_experts=16, top_k=4, d_model=6144, d_ff=10752),
+        attn_impl="xla_flash", attn_chunk=2048,
+    )
+
+
+def make_cell(cell: str, topo, reduced: bool = False,
+              probe_layers=None):
+    return lm_cell(ARCH_ID, make_config(reduced), cell, topo,
+                   probe_layers=probe_layers)

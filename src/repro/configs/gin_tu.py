@@ -1,0 +1,62 @@
+"""gin-tu [arXiv:1810.00826].
+
+5 layers, d_hidden 64, sum aggregator, learnable ε.
+"""
+
+from repro.configs.cells import GNN_SHAPES, gnn_train_cell
+from repro.models.gnn import gin
+
+ARCH_ID = "gin-tu"
+FAMILY = "gnn"
+SHAPES = list(GNN_SHAPES)
+
+
+def make_config(reduced: bool = False, cell: str = "full_graph_sm"):
+    sh = GNN_SHAPES.get(cell, GNN_SHAPES["full_graph_sm"])
+    d_in = sh.get("d_feat", 64)
+    n_classes = max(2, sh.get("classes", 2))
+    if reduced:
+        return gin.GINConfig(n_layers=2, d_hidden=16, d_in=d_in,
+                             n_classes=n_classes)
+    return gin.GINConfig(n_layers=5, d_hidden=64, d_in=d_in,
+                         n_classes=n_classes)
+
+
+def _flops(cell: str, cfg) -> float:
+    sh = GNN_SHAPES[cell]
+    e = sh["e"] * sh.get("batch", 1)
+    n = sh["n"] * sh.get("batch", 1)
+    per_node = 2 * (cfg.d_hidden * cfg.d_hidden * 2)
+    return 3.0 * cfg.n_layers * (e * cfg.d_hidden + n * per_node)
+
+
+def _molecule_loss(params, batch, cfg):
+    """Graph-level regression for the packed molecule cell: mean-pool
+    node features then score (GIN-ε readout)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.gnn.layers import mlp_apply
+
+    def one(x, es, ed, em, y):
+        logits = gin.forward(params, x, es, ed, em, cfg)
+        pred = jnp.mean(logits)
+        return (pred - y) ** 2
+
+    return jnp.mean(
+        jax.vmap(one)(
+            batch["x"], batch["edge_src"], batch["edge_dst"],
+            batch["edge_mask"], batch["y"],
+        )
+    )
+
+
+def make_cell(cell: str, topo, reduced: bool = False):
+    cfg = make_config(reduced, cell)
+    loss = (
+        _molecule_loss if cell == "molecule"
+        else gin.node_classification_loss
+    )
+    return gnn_train_cell(
+        ARCH_ID, cell, loss, gin.init_params, cfg, topo,
+        coords=False, triplets=False, model_flops=_flops(cell, cfg),
+    )

@@ -1,0 +1,27 @@
+"""mind [arXiv:1904.08030].
+
+embed_dim 64, 4 interest capsules, 3 routing iterations,
+multi-interest interaction; 10⁶-row item table.
+"""
+
+from repro.configs.cells import RECSYS_SHAPES, mind_cell
+from repro.models.mind import MINDConfig
+
+ARCH_ID = "mind"
+FAMILY = "recsys"
+SHAPES = list(RECSYS_SHAPES)
+
+
+def make_config(reduced: bool = False) -> MINDConfig:
+    if reduced:
+        return MINDConfig(n_items=2000, n_profile=500, hist_len=8,
+                          n_negatives=15)
+    # table rows are powers of two so they shard evenly over both
+    # production meshes (2^20 ≈ the assigned 10^6-row table)
+    return MINDConfig(embed_dim=64, n_interests=4, capsule_iters=3,
+                      n_items=1 << 20, n_profile=1 << 17,
+                      hist_len=50, n_negatives=127)
+
+
+def make_cell(cell: str, topo, reduced: bool = False):
+    return mind_cell(ARCH_ID, cell, make_config(reduced), topo)

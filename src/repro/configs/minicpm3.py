@@ -1,0 +1,43 @@
+"""minicpm3-4b [hf:openbmb/MiniCPM3-4B].
+
+62L d_model=2560 40H d_ff=6400 vocab=73448, MLA attention
+(q_lora 768, kv_lora 256, qk_nope 64, qk_rope 32, v_head 64), tied
+embeddings.  The decode cells use the absorbed-MLA formulation (the
+KV cache stays in latent space: 288 values/token vs 10240 for MHA).
+"""
+
+from repro.configs.cells import LM_SHAPES, lm_cell
+from repro.models.lm import LMConfig
+
+ARCH_ID = "minicpm3-4b"
+FAMILY = "lm"
+SHAPES = list(LM_SHAPES)
+
+
+def make_config(reduced: bool = False) -> LMConfig:
+    if reduced:
+        return LMConfig(
+            name=ARCH_ID + "-reduced", n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=4, d_ff=128, vocab=181,
+            param_dtype="float32", loss_chunk=8, attn_type="mla",
+            q_lora_rank=48, kv_lora_rank=32, qk_nope_dim=16,
+            qk_rope_dim=8, v_head_dim=16, tie_embeddings=True,
+        )
+    # vocab padded 73448 -> 73472 so the embedding TP-shards over 16
+    # (standard vocab padding; the 24 pad rows are never produced)
+    return LMConfig(
+        name=ARCH_ID, n_layers=62, d_model=2560, n_heads=40,
+        n_kv_heads=40, d_ff=6400, vocab=73472, attn_type="mla",
+        q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64,
+        qk_rope_dim=32, v_head_dim=64, tie_embeddings=True,
+        # §Perf iteration 2: 8k kv-chunks — the blockwise-softmax
+        # carry (B,H,S,dv) f32 is rewritten once per chunk, so fewer,
+        # larger chunks cut the dominant HBM term ~4x.
+        attn_impl="xla_flash", attn_chunk=8192,
+    )
+
+
+def make_cell(cell: str, topo, reduced: bool = False,
+              probe_layers=None):
+    return lm_cell(ARCH_ID, make_config(reduced), cell, topo,
+                   probe_layers=probe_layers)

@@ -1,0 +1,33 @@
+"""minitron-8b [arXiv:2407.14679] (pruned nemotron).
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.  Nemotron
+family uses squared-ReLU (2-matrix) MLP — with it the config lands on
+~8B params (a 3-matrix SwiGLU would overshoot to ~10B).
+"""
+
+from repro.configs.cells import LM_SHAPES, lm_cell
+from repro.models.lm import LMConfig
+
+ARCH_ID = "minitron-8b"
+FAMILY = "lm"
+SHAPES = list(LM_SHAPES)
+
+
+def make_config(reduced: bool = False) -> LMConfig:
+    if reduced:
+        return LMConfig(
+            name=ARCH_ID + "-reduced", n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=2, d_ff=128, vocab=241,
+            param_dtype="float32", loss_chunk=8, mlp_type="relu2",
+        )
+    return LMConfig(
+        name=ARCH_ID, n_layers=32, d_model=4096, n_heads=32,
+        n_kv_heads=8, d_ff=16384, vocab=256000, mlp_type="relu2",
+        attn_impl="xla_flash", attn_chunk=2048,
+    )
+
+
+def make_cell(cell: str, topo, reduced: bool = False,
+              probe_layers=None):
+    return lm_cell(ARCH_ID, make_config(reduced), cell, topo,
+                   probe_layers=probe_layers)

@@ -1,0 +1,40 @@
+"""AGM/EAGM core — the paper's primary contribution.
+
+Layers:
+  ordering.py    strict weak orderings (chaotic/dijkstra/Δ/KLA)
+  processing.py  processing functions π (SSSP/BFS/CC/SSWP)
+  agm.py         Definition-3 AGM + logical (oracle) engine
+  eagm.py        spatial hierarchies (buffer/threadq/nodeq/numaq)
+  engine.py      distributed shard_map engine (the TPU realization)
+  metrics.py     work/sync metrics + calibrated cost model
+"""
+
+from repro.core.ordering import (
+    Chaotic,
+    Dijkstra,
+    DeltaStepping,
+    KLA,
+    Ordering,
+    make_ordering,
+)
+from repro.core.processing import SSSP, BFS, CC, SSWP, ProcessingFn
+from repro.core.agm import AGM, sssp_agm, run_logical, dijkstra_reference
+from repro.core.eagm import EAGMPolicy, make_policy, paper_variant_grid
+from repro.core.engine import (
+    EngineConfig,
+    run_distributed,
+    make_engine,
+    initial_state,
+    sssp_sources,
+    cc_sources,
+)
+from repro.core.metrics import WorkMetrics, model_time_s
+
+__all__ = [
+    "Chaotic", "Dijkstra", "DeltaStepping", "KLA", "Ordering",
+    "make_ordering", "SSSP", "BFS", "CC", "SSWP", "ProcessingFn",
+    "AGM", "sssp_agm", "run_logical", "dijkstra_reference",
+    "EAGMPolicy", "make_policy", "paper_variant_grid",
+    "EngineConfig", "run_distributed", "make_engine", "initial_state",
+    "sssp_sources", "cc_sources", "WorkMetrics", "model_time_s",
+]

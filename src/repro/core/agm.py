@@ -1,0 +1,129 @@
+"""The Abstract Graph Machine (paper §III, Definition 3) and its
+*logical* (sequentially-emulated, exactly-faithful) execution engine.
+
+The logical engine is the executable form of the paper's semantics:
+
+    "An AGM starts execution with the initial workitem set.  [...] the
+    workitems within the smallest equivalence class are fed to the
+    processing function.  [...] The AGM executes workitems in the next
+    equivalence class once it finished executing all the workitems in
+    the current smallest equivalence class.  An AGM terminates when it
+    executes all the workitems in all the equivalence classes."
+
+Because the state combine is monotone (min/max — paper §II), executing
+the workitems of one equivalence class in any sequential order is
+observationally equivalent to the parallel distributed-demon execution
+with composite atomicity; this engine is therefore a *semantic oracle*
+for the distributed engine in :mod:`repro.core.engine`, and the work
+metrics it reports (classes, workitems, relaxations, commits) are the
+paper's work/ordering quantities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+from repro.core.metrics import WorkMetrics
+from repro.core.ordering import Ordering, Chaotic, Dijkstra, DeltaStepping, KLA
+from repro.core.processing import ProcessingFn, SSSP
+from repro.graph.formats import Graph, CSR, coo_to_csr
+
+
+def _class_key_scalar(ordering: Ordering, dist: float, level: int) -> float:
+    if isinstance(ordering, Chaotic):
+        return 0.0
+    if isinstance(ordering, Dijkstra):
+        return dist
+    if isinstance(ordering, DeltaStepping):
+        return math.floor(dist / ordering.delta)
+    if isinstance(ordering, KLA):
+        return math.floor(level / ordering.k)
+    raise TypeError(ordering)
+
+
+@dataclasses.dataclass
+class AGM:
+    """The 6-tuple (G, WorkItem, Q, π, <_wis, S) of Definition 3.
+
+    ``WorkItem`` is implicit in (π, ordering): ⟨v, state⟩ plus a level
+    attribute when the ordering requires one (KLA, Definition 8).
+    """
+
+    graph: Graph
+    processing: ProcessingFn
+    ordering: Ordering
+    initial_workitems: list  # [(v, state, level)]
+
+    def run(self, max_classes: int = 10**9) -> tuple[np.ndarray, WorkMetrics]:
+        return run_logical(self, max_classes=max_classes)
+
+
+def sssp_agm(graph: Graph, source: int, ordering: Ordering) -> AGM:
+    """Proposition 1/2/3: the SSSP AGM with S = {⟨source, 0⟩}.
+    Rule R0 of Algorithm 1 (d(r) := 0) is the initial workitem set."""
+    return AGM(graph, SSSP, ordering, [(int(source), 0.0, 0)])
+
+
+def run_logical(
+    agm: AGM, max_classes: int = 10**9
+) -> tuple[np.ndarray, WorkMetrics]:
+    """Execute the AGM per Definition 3 semantics."""
+    csr: CSR = coo_to_csr(agm.graph)
+    p = agm.processing
+    state = np.full(agm.graph.n + 1, p.worst, dtype=np.float64)
+    m = WorkMetrics()
+
+    # pending workitems bucketed by equivalence-class key
+    buckets: dict[float, list] = defaultdict(list)
+    for (v, s, l) in agm.initial_workitems:
+        buckets[_class_key_scalar(agm.ordering, s, l)].append((v, s, l))
+
+    while buckets and m.classes < max_classes:
+        kmin = min(buckets.keys())
+        batch = buckets.pop(kmin)
+        m.classes += 1
+        # Workitems in one class execute in parallel; by monotonicity an
+        # arbitrary sequential order is equivalent.  New workitems may
+        # land in the same class (re-entering `buckets[kmin]`).
+        for (v, s, l) in batch:
+            m.workitems += 1
+            if p.better(s, state[v]):  # condition C
+                state[v] = s  # update U (atomic)
+                m.commits += 1
+                nbrs, ws = csr.neighbors(v)
+                for u, w in zip(nbrs, ws):  # construct N(w)
+                    m.relaxations += 1
+                    cand = float(p.edge_update(s, float(w)))
+                    key = _class_key_scalar(agm.ordering, cand, l + 1)
+                    assert key >= kmin - 1e-9, (
+                        "AGM invariant violated: generated workitem in an "
+                        "already-executed equivalence class"
+                    )
+                    buckets[key].append((int(u), cand, l + 1))
+    return state[: agm.graph.n], m
+
+
+def dijkstra_reference(graph: Graph, source: int) -> np.ndarray:
+    """Independent textbook Dijkstra (heapq) — the ground-truth oracle."""
+    import heapq
+
+    csr = coo_to_csr(graph)
+    dist = np.full(graph.n, np.inf, dtype=np.float64)
+    dist[source] = 0.0
+    heap = [(0.0, source)]
+    while heap:
+        d, v = heapq.heappop(heap)
+        if d > dist[v]:
+            continue
+        nbrs, ws = csr.neighbors(v)
+        for u, w in zip(nbrs, ws):
+            nd = d + float(w)
+            if nd < dist[u]:
+                dist[u] = nd
+                heapq.heappush(heap, (nd, u))
+    return dist

@@ -1,0 +1,110 @@
+"""Extended AGM (paper §IV): spatial hierarchies with annotated
+orderings.
+
+An EAGM keeps the AGM's ordering at the *root* of a spatial hierarchy
+(so it generates the same root equivalence classes — the EAGM
+extension condition) and attaches additional, more relaxed orderings
+to lower spatial levels, each ordering only the workitems resident in
+that level's memory.
+
+Hardware adaptation (DESIGN.md §2/§5): the paper's hierarchy
+GLOBAL → PROCESS(node) → NUMA → THREAD maps onto a TPU pod cluster as
+
+    GLOBAL → POD → DEVICE (chip) → CHUNK (VMEM-resident top-B prefix)
+
+and the paper's variant names keep their meaning:
+
+    buffer   — root ordering only (the plain AGM)
+    nodeq    — Dijkstra ordering at PROCESS level → POD scope here
+    numaq    — Dijkstra ordering at NUMA level → DEVICE scope here
+    threadq  — Dijkstra ordering at THREAD level → CHUNK scope here
+               (each device drains the B smallest pending items of the
+               current root class, like a thread-local priority queue)
+
+The scope tells the distributed engine which collective implements the
+sub-ordering decision: POD needs a pod-internal pmin (cheaper than
+global), DEVICE needs a local reduction only, CHUNK needs a local
+top-B only.  Lower level ⇒ less synchronization — the paper's core
+performance knob.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.ordering import Ordering, Dijkstra, make_ordering
+
+# spatial levels, outermost to innermost
+LEVELS = ("global", "pod", "device", "chunk")
+
+# paper variant name -> spatial level carrying the <_dj sub-ordering
+VARIANT_LEVEL = {
+    "buffer": None,
+    "nodeq": "pod",
+    "numaq": "device",
+    "threadq": "chunk",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EAGMPolicy:
+    """Root ordering + (at most one) sub-root Dijkstra annotation.
+
+    ``sub_level=None`` is the plain AGM (= the paper's `buffer`).
+    ``chunk_size`` is B, the drain size for chunk-level ordering.
+    """
+
+    root: Ordering
+    sub_level: Optional[str] = None  # 'pod' | 'device' | 'chunk' | None
+    sub_ordering: Ordering = Dijkstra()
+    chunk_size: int = 1024
+
+    def __post_init__(self):
+        if self.sub_level is not None and self.sub_level not in LEVELS[1:]:
+            raise ValueError(f"bad spatial level {self.sub_level!r}")
+
+    @property
+    def variant(self) -> str:
+        for name, lvl in VARIANT_LEVEL.items():
+            if lvl == self.sub_level:
+                return name
+        return f"custom({self.sub_level})"
+
+    @property
+    def name(self) -> str:
+        return f"{self.root.name}+{self.variant}"
+
+
+def make_policy(
+    root_spec: str, variant: str = "buffer", chunk_size: int = 1024
+) -> EAGMPolicy:
+    """E.g. make_policy('delta:5', 'threadq') — the paper's Fig. 4 grid."""
+    if variant not in VARIANT_LEVEL:
+        raise ValueError(
+            f"variant must be one of {sorted(VARIANT_LEVEL)}, got {variant!r}"
+        )
+    return EAGMPolicy(
+        root=make_ordering(root_spec),
+        sub_level=VARIANT_LEVEL[variant],
+        chunk_size=chunk_size,
+    )
+
+
+def paper_variant_grid(
+    deltas=(3.0, 5.0, 7.0), ks=(1, 2, 3), chunk_size: int = 1024
+) -> list[EAGMPolicy]:
+    """The paper's evaluation grid: {Δ-stepping, KLA, Chaotic} ×
+    {buffer, threadq, nodeq, numaq} (Figures 5-7), with the Δ and K
+    sweeps of the experiments, plus the Dijkstra AGM baseline."""
+    grid: list[EAGMPolicy] = []
+    roots = (
+        [f"delta:{d:g}" for d in deltas]
+        + [f"kla:{k}" for k in ks]
+        + ["chaotic"]
+    )
+    for root in roots:
+        for variant in ("buffer", "threadq", "nodeq", "numaq"):
+            grid.append(make_policy(root, variant, chunk_size))
+    grid.append(make_policy("dijkstra", "buffer", chunk_size))
+    return grid

@@ -1,0 +1,348 @@
+"""Distributed EAGM execution engine (shard_map + lax collectives).
+
+This is the TPU-native realization of the paper's AGM/EAGM semantics
+(DESIGN.md §2).  The graph is 1D-partitioned (paper §V); pending
+workitems are a *dense frontier*: per owned vertex v the device keeps
+
+    D[v] — committed state (the paper's ``distance`` mapping), and
+    T[v] — the best pending workitem state for v (min over all
+           outstanding ⟨v, s⟩ workitems; min-monotonicity makes the
+           dominated ones semantically inert, they only ever counted
+           as the paper's wasted work).
+
+``v`` is a pending workitem iff ``better(T[v], D[v])``.
+
+One loop iteration = one superstep:
+
+  1. class keys of pending workitems under the ROOT ordering; global
+     pmin ⇒ the current smallest equivalence class (AGM semantics).
+  2. EAGM sub-ordering refines eligibility *within* the root class at
+     a spatial scope: pod (pmin over intra-pod axes), device (local
+     reduction only) or chunk (local top-B) — less synchronization at
+     lower levels, the paper's §IV knob.
+  3. commit eligible workitems (atomic in the dataflow sense),
+  4. relax their out-edges (ELL min-plus, fat rows pre-chunked),
+  5. exchange candidates to owners: paper-faithful baseline = dense
+     all-reduce-min (`pmin`); optimized = all_to_all transpose +
+     local min (a min-reduce-scatter, (P-1)/P of the bytes and no
+     full-|V| receive buffer) — the beyond-paper §Perf variant,
+  6. fold into T, count pending via psum ⇒ termination detection
+     (active-work count, paper §II).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.eagm import EAGMPolicy
+from repro.core.metrics import WorkMetrics
+from repro.core.ordering import needs_level
+from repro.core.processing import ProcessingFn, SSSP
+from repro.graph.partition import PartitionedGraph
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    policy: EAGMPolicy
+    processing: ProcessingFn = SSSP
+    exchange: str = "a2a"  # 'a2a' (reduce-scatter-min) | 'pmin' (baseline)
+    max_iters: int = 10**9
+    collect_metrics: bool = True
+
+    def __post_init__(self):
+        if self.exchange not in ("a2a", "pmin"):
+            raise ValueError(self.exchange)
+
+
+def _flat_rank(axis_names, mesh_shape):
+    r = jnp.int32(0)
+    for name, size in zip(axis_names, mesh_shape):
+        r = r * size + jax.lax.axis_index(name)
+    return r
+
+
+def _ranks_within_pod(axis_names):
+    """Axis names forming the intra-pod scope (all but 'pod')."""
+    return tuple(a for a in axis_names if a != "pod")
+
+
+def build_step(
+    cfg: EngineConfig,
+    axis_names: tuple,
+    mesh_shape: tuple,
+    n_local: int,
+    n_parts: int,
+):
+    """Build the shard_map-inner superstep body + loop."""
+    p = cfg.processing
+    pol = cfg.policy
+    use_level = needs_level(pol.root)
+    is_min = p.reduce is jnp.minimum
+    worst = jnp.float32(p.worst)
+    n_pad = n_parts * n_local
+    all_axes = axis_names
+    pod_axes = _ranks_within_pod(axis_names)
+
+    def scatter_reduce(col, vals, size):
+        """Dense scatter-combine of edge candidates into a (size+1,)
+        buffer (slot `size` swallows ELL padding)."""
+        buf = jnp.full((size + 1,), worst, dtype=jnp.float32)
+        if is_min:
+            return buf.at[col.reshape(-1)].min(vals.reshape(-1))
+        return buf.at[col.reshape(-1)].max(vals.reshape(-1))
+
+    def reduce2(a, b):
+        return p.reduce(a, b)
+
+    def local_extreme(x):
+        return jnp.min(x) if is_min else jnp.max(x)
+
+    def pextreme(x, axes):
+        return jax.lax.pmin(x, axes) if is_min else jax.lax.pmax(x, axes)
+
+    def step(row_src, col, wgt, carry):
+        D, T, L, it, active, commits, relax, classes, last_key = carry
+        del active
+
+        # ---- 1. root ordering: current global minimal class ----------
+        pending = p.better(T, D)
+        key = jnp.where(pending, pol.root.class_key(T, L), INF)
+        kmin = jax.lax.pmin(jnp.min(key), all_axes)
+        eligible = pending & (key == kmin)
+
+        # ---- 2. EAGM spatial sub-ordering (within root class) --------
+        if pol.sub_level is not None:
+            sub = jnp.where(eligible, pol.sub_ordering.class_key(T, L), INF)
+            if pol.sub_level == "pod":
+                smin = jax.lax.pmin(jnp.min(sub), pod_axes)
+                eligible = eligible & (sub == smin)
+            elif pol.sub_level == "device":
+                eligible = eligible & (sub == jnp.min(sub))
+            elif pol.sub_level == "chunk":
+                B = min(pol.chunk_size, n_local)
+                kth = -jax.lax.top_k(-sub, B)[0][B - 1]
+                eligible = eligible & (sub <= kth)
+
+        # ---- 3. commit (atomic monotone state update) -----------------
+        D = jnp.where(eligible, T, D)
+
+        # ---- 4. relax out-edges of eligible vertices (ELL) ------------
+        if is_min:
+            # §Perf(S2): semiring-implicit masking — mask at the
+            # (n_local,) vertex level and let +inf padding annihilate
+            # padded slots (inf + w = inf = identity of min).  Avoids
+            # materializing two (R, W) mask/select buffers per step.
+            Dm = jnp.where(eligible, D, worst)  # (n_local+1,)
+            src_val = Dm[row_src]               # (R,)
+            cand = jnp.broadcast_to(
+                p.edge_update(src_val[:, None], wgt), wgt.shape
+            )  # (R, W); CC's update ignores wgt -> explicit broadcast.
+            # Padded ELL slots always carry col == n_pad, so they land
+            # in the discarded dummy scatter slot for ANY semiring.
+        else:
+            src_on = eligible[row_src]
+            src_val = jnp.where(src_on, D[row_src], worst)
+            cand = p.edge_update(src_val[:, None], wgt)
+            cand = jnp.where(src_on[:, None] & (wgt < INF), cand, worst)
+
+        C = scatter_reduce(col, cand, n_pad)[:n_pad]
+
+        if use_level:
+            live = eligible[row_src][:, None] & (wgt < INF)
+            lvl_cand = jnp.where(live, (L[row_src] + 1.0)[:, None], INF)
+            # second scatter: min level among candidates matching the
+            # winning value (deterministic tie-break)
+            win = live & (cand == C[jnp.clip(col, 0, n_pad - 1)]) & (
+                col < n_pad
+            )
+            CL = jnp.full((n_pad + 1,), INF, dtype=jnp.float32)
+            CL = CL.at[col.reshape(-1)].min(
+                jnp.where(win, lvl_cand, INF).reshape(-1)
+            )[:n_pad]
+        else:
+            CL = None
+
+        # ---- 5. exchange candidates to owner devices ------------------
+        if cfg.exchange == "pmin":
+            # paper-faithful dense exchange: all-reduce-combine of the
+            # full |V| candidate array ("send every update to the owner")
+            Cg = pextreme(C, all_axes)
+            me = _flat_rank(axis_names, mesh_shape)
+            mine = jax.lax.dynamic_slice(Cg, (me * n_local,), (n_local,))
+            if use_level:
+                CLw = jnp.where(C == Cg, CL, INF)  # my levels where I win
+                CLg = jax.lax.pmin(CLw, all_axes)
+                mineL = jax.lax.dynamic_slice(
+                    CLg, (me * n_local,), (n_local,)
+                )
+        else:
+            # optimized: all_to_all transpose + local combine
+            # (= reduce-scatter with a min/max combiner)
+            C2 = C.reshape(n_parts, n_local)
+            X = jax.lax.all_to_all(
+                C2, all_axes, split_axis=0, concat_axis=0, tiled=True
+            )
+            mine = p.reduce_array(X, axis=0)
+            if use_level:
+                L2 = CL.reshape(n_parts, n_local)
+                XL = jax.lax.all_to_all(
+                    L2, all_axes, split_axis=0, concat_axis=0, tiled=True
+                )
+                mineL = jnp.min(jnp.where(X == mine[None, :], XL, INF), 0)
+
+        # ---- 6. fold into pending state T ------------------------------
+        mine_ext = jnp.concatenate([mine, jnp.array([worst])])
+        improved = p.better(mine_ext, T)
+        T = jnp.where(improved, mine_ext, T)
+        if use_level:
+            mineL_ext = jnp.concatenate([mineL, jnp.array([INF])])
+            L = jnp.where(improved, mineL_ext, L)
+
+        if cfg.collect_metrics:
+            live = eligible[row_src][:, None] & (wgt < INF)
+            commits = commits + jax.lax.psum(
+                jnp.sum(eligible.astype(jnp.int32)), all_axes
+            )
+            relax = relax + jax.lax.psum(
+                jnp.sum(live.astype(jnp.int32)), all_axes
+            )
+            classes = classes + jnp.int32(kmin != last_key)
+
+        # termination detection: global count of pending workitems
+        # (paper §II "active work"); kept in the carry so the while
+        # predicate stays collective-free.
+        pending_new = p.better(T, D)
+        active = jax.lax.psum(
+            jnp.sum(pending_new.astype(jnp.int32)), all_axes
+        )
+
+        return (D, T, L, it + 1, active, commits, relax, classes, kmin)
+
+    def cond(carry):
+        it, active = carry[3], carry[4]
+        return (active > 0) & (it < cfg.max_iters)
+
+    def loop(row_src, col, wgt, D, T, L):
+        carry = (
+            D, T, L,
+            jnp.int32(0), jnp.int32(1),
+            jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.float32(jnp.nan),
+        )
+        body = functools.partial(step, row_src, col, wgt)
+        carry = jax.lax.while_loop(cond, lambda c: body(c), carry)
+        D, T, L, it, active, commits, relax, classes, _ = carry
+        return D[:n_local], it, commits, relax, classes
+
+    return loop
+
+
+def make_engine(
+    pg_shape: dict,
+    mesh: Mesh,
+    cfg: EngineConfig,
+):
+    """Return a jitted distributed solver for graphs with the given
+    partition shape.  ``pg_shape`` = dict(n_parts, n_local, rows, width).
+    """
+    axis_names = tuple(mesh.axis_names)
+    mesh_shape = tuple(mesh.devices.shape)
+    n_parts = pg_shape["n_parts"]
+    n_local = pg_shape["n_local"]
+    assert n_parts == int(np.prod(mesh_shape)), (
+        f"partition parts {n_parts} != mesh devices {np.prod(mesh_shape)}"
+    )
+
+    loop = build_step(cfg, axis_names, mesh_shape, n_local, n_parts)
+
+    def local(row_src, col, wgt, D, T, L):
+        # shard_map hands each device a leading axis of size 1
+        Dn, it, commits, relax, classes = loop(
+            row_src[0], col[0], wgt[0], D[0], T[0], L[0]
+        )
+        return Dn[None], it, commits, relax, classes
+
+    shard = P(axis_names)  # leading axis split over the whole mesh
+    sharded = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(shard, shard, shard, shard, shard, shard),
+        out_specs=(shard, P(), P(), P(), P()),
+    )
+
+    @jax.jit
+    def solve(row_src, col, wgt, D0, T0, L0):
+        return sharded(row_src, col, wgt, D0, T0, L0)
+
+    return solve
+
+
+def initial_state(
+    pg: PartitionedGraph, processing: ProcessingFn, sources: list[tuple]
+):
+    """Dense initial state from the initial workitem set S.
+
+    ``sources`` — [(vertex, state, level)].  D = worst everywhere,
+    T[v] = s for each initial workitem.  Shapes (P, n_local+1); the
+    trailing slot per device is the dummy target of padded virtual
+    rows and stays at `worst` forever.
+    """
+    P_, nl = pg.n_parts, pg.n_local
+    worst = np.float32(processing.worst)
+    D = np.full((P_, nl + 1), worst, dtype=np.float32)
+    T = np.full((P_, nl + 1), worst, dtype=np.float32)
+    L = np.full((P_, nl + 1), np.inf, dtype=np.float32)
+    for (v, s, lvl) in sources:
+        T[v // nl, v % nl] = s
+        L[v // nl, v % nl] = lvl
+    return D, T, L
+
+
+def run_distributed(
+    pg: PartitionedGraph,
+    mesh: Mesh,
+    cfg: EngineConfig,
+    sources: list[tuple],
+) -> tuple[np.ndarray, WorkMetrics]:
+    """Solve and return (state[:n], metrics)."""
+    solve = make_engine(
+        dict(n_parts=pg.n_parts, n_local=pg.n_local), mesh, cfg
+    )
+    D0, T0, L0 = initial_state(pg, cfg.processing, sources)
+    D, it, commits, relax, classes = solve(
+        pg.row_src, pg.col, pg.wgt, D0, T0, L0
+    )
+    D = np.asarray(D).reshape(-1)[: pg.n]
+    it = int(it)
+    m = WorkMetrics(
+        classes=int(classes),
+        commits=int(commits),
+        relaxations=int(relax),
+        supersteps=it,
+        workitems=int(commits),
+    )
+    # analytic exchange-byte accounting (per device, summed over devices)
+    bytes_per_iter_per_dev = (
+        pg.n_pad * 4 * (2 if cfg.exchange == "pmin" else 1)
+        * (pg.n_parts - 1) // max(1, pg.n_parts)
+    )
+    m.exchange_bytes = it * bytes_per_iter_per_dev * pg.n_parts
+    m.collective_rounds = it * (3 if cfg.collect_metrics else 2)
+    return D, m
+
+
+def sssp_sources(source: int) -> list[tuple]:
+    return [(int(source), 0.0, 0)]
+
+
+def cc_sources(n: int) -> list[tuple]:
+    return [(v, float(v), 0) for v in range(n)]

@@ -1,0 +1,61 @@
+"""Work / synchronization metrics.
+
+The container cannot time a Cray (or a TPU pod), so the benchmark
+tables report the quantities the paper's wall-clock decomposes into:
+work terms (relaxations = edges relaxed, commits = useful state
+updates, workitems processed) and synchronization terms (equivalence
+classes / supersteps, collective rounds), plus exchanged bytes.  A
+calibrated linear cost model over these terms reproduces the *shape*
+of the paper's comparisons (EXPERIMENTS.md §Paper-validation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class WorkMetrics:
+    classes: int = 0        # equivalence classes executed (root supersteps)
+    workitems: int = 0      # workitems fed to the processing function
+    commits: int = 0        # U evaluations that changed state (useful work)
+    relaxations: int = 0    # edge relaxations (candidate generations)
+    supersteps: int = 0     # distributed engine loop iterations
+    exchange_bytes: int = 0  # bytes moved by candidate exchange collectives
+    collective_rounds: int = 0
+
+    def waste_ratio(self) -> float:
+        """Relaxations per useful commit — the paper's redundant-work axis."""
+        return self.relaxations / max(1, self.commits)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return (
+            f"classes={self.classes} supersteps={self.supersteps} "
+            f"workitems={self.workitems} commits={self.commits} "
+            f"relax={self.relaxations} waste={self.waste_ratio():.2f} "
+            f"xbytes={self.exchange_bytes}"
+        )
+
+
+# Calibrated cost model (EXPERIMENTS.md §Paper-validation): seconds =
+# a*relaxations + b*commits + c*supersteps + d*exchange_bytes.  The
+# coefficients below are per-unit costs on the target (TPU v5e pod):
+# an edge relaxation is a few VPU flops + an HBM access amortized over
+# ELL rows; a superstep costs one small-collective latency; exchange
+# bytes move at ICI bandwidth.
+COST_RELAX_S = 2.0e-9       # ~0.5 Gedge/s/chip effective scatter-min
+COST_SUPERSTEP_S = 15e-6    # small all-reduce latency on a pod
+COST_BYTE_S = 1.0 / 45e9    # ~45 GB/s effective per-chip ICI
+
+
+def model_time_s(m: WorkMetrics, n_chips: int = 1) -> float:
+    """Cost-model seconds for one SSSP solve on ``n_chips`` (work terms
+    divide across chips; superstep latency does not)."""
+    return (
+        COST_RELAX_S * m.relaxations / n_chips
+        + COST_SUPERSTEP_S * m.supersteps
+        + COST_BYTE_S * m.exchange_bytes / n_chips
+    )

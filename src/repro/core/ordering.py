@@ -1,0 +1,101 @@
+"""Strict weak orderings on workitems (paper §III, Definitions 5-9).
+
+A strict weak ordering ``<_wis`` partitions the pending workitem set
+into ordered equivalence classes.  In the dense-frontier realization a
+workitem is ⟨v, T[v]⟩ (plus the KLA level attribute L[v]); the ordering
+is represented by a *class key* function: two workitems are in the
+same equivalence class iff their keys are equal, and classes are
+processed in increasing key order.  The engine computes the global
+minimum key over pending workitems each superstep and processes
+exactly the workitems whose key attains it — which is precisely the
+AGM semantics ("execute the smallest equivalence class; repeat").
+
+Keys are float32 so that ``pmin`` collectives implement the induced
+class ordering ``<_WIS`` directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Chaotic:
+    """Definition 5: w1 <_chaotic w2 is always False — one giant class."""
+
+    name: str = "chaotic"
+
+    def class_key(self, dist, level):
+        return jnp.zeros_like(dist)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dijkstra:
+    """Definition 6: w1 <_dj w2 iff d1 < d2 — one class per distance."""
+
+    name: str = "dijkstra"
+
+    def class_key(self, dist, level):
+        return dist
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaStepping:
+    """Definition 7: w1 <_Δ w2 iff ⌊d1/Δ⌋ < ⌊d2/Δ⌋."""
+
+    delta: float = 5.0
+
+    @property
+    def name(self) -> str:
+        return f"delta{self.delta:g}"
+
+    def class_key(self, dist, level):
+        return jnp.floor(dist / jnp.float32(self.delta))
+
+
+@dataclasses.dataclass(frozen=True)
+class KLA:
+    """Definition 9: w1 <_kla w2 iff ⌊l1/k⌋ < ⌊l2/k⌋ (level attribute)."""
+
+    k: int = 2
+
+    @property
+    def name(self) -> str:
+        return f"kla{self.k}"
+
+    @property
+    def needs_level(self) -> bool:
+        return True
+
+    def class_key(self, dist, level):
+        return jnp.floor(level.astype(jnp.float32) / jnp.float32(self.k))
+
+
+Ordering = Union[Chaotic, Dijkstra, DeltaStepping, KLA]
+
+
+def needs_level(ordering: Ordering) -> bool:
+    return getattr(ordering, "needs_level", False)
+
+
+def make_ordering(spec: str) -> Ordering:
+    """Parse 'chaotic' | 'dijkstra' | 'delta:5' | 'kla:2'."""
+    if ":" in spec:
+        kind, arg = spec.split(":", 1)
+    else:
+        kind, arg = spec, None
+    kind = kind.strip().lower()
+    if kind == "chaotic":
+        return Chaotic()
+    if kind in ("dijkstra", "dj"):
+        return Dijkstra()
+    if kind in ("delta", "delta-stepping", "ds"):
+        return DeltaStepping(float(arg) if arg else 5.0)
+    if kind == "kla":
+        return KLA(int(arg) if arg else 2)
+    raise ValueError(f"unknown ordering spec: {spec!r}")

@@ -1,0 +1,79 @@
+"""Processing functions π (paper §III, Definition 4 and variants).
+
+All the graph problems the AGM models here share the monotone
+state-update structure that makes the self-stabilizing kernel
+lock-free (paper §II): the per-vertex state combine is ``min`` (or
+``max``), so composite atomicity collapses to an atomic scatter-min.
+
+A :class:`ProcessingFn` specifies, in jnp-traceable form:
+
+* ``edge_update(s, w)`` — N of the statement: the candidate state a
+  workitem ⟨u, s⟩ generates for a neighbor across an edge of weight w
+  (π^sssp: ``s + w``; BFS: ``s + 1``; CC: ``s``; SSWP: ``min(s, w)``).
+* ``better(a, b)`` — C of the statement: does candidate a improve b.
+* ``reduce`` / ``worst`` — the monotone combine and its identity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessingFn:
+    name: str
+    edge_update: Callable  # (src_state, edge_weight) -> candidate
+    better: Callable       # (a, b) -> bool, True iff a strictly improves b
+    reduce: Callable       # jnp.minimum or jnp.maximum
+    worst: float           # identity of `reduce` (= "no candidate")
+    uses_weights: bool = True
+
+    def reduce_array(self, x, axis):
+        return (
+            jnp.min(x, axis=axis)
+            if self.reduce is jnp.minimum
+            else jnp.max(x, axis=axis)
+        )
+
+
+SSSP = ProcessingFn(
+    name="sssp",
+    edge_update=lambda s, w: s + w,
+    better=lambda a, b: a < b,
+    reduce=jnp.minimum,
+    worst=float("inf"),
+)
+
+BFS = ProcessingFn(
+    name="bfs",
+    edge_update=lambda s, w: s + 1.0,
+    better=lambda a, b: a < b,
+    reduce=jnp.minimum,
+    worst=float("inf"),
+    uses_weights=False,
+)
+
+# Connected components by min-label propagation.  Initial workitem set
+# S = {⟨v, v⟩ : v ∈ V} (every vertex starts pending with its own id).
+CC = ProcessingFn(
+    name="cc",
+    edge_update=lambda s, w: s,
+    better=lambda a, b: a < b,
+    reduce=jnp.minimum,
+    worst=float("inf"),
+    uses_weights=False,
+)
+
+# Single-source widest path: maximize the bottleneck capacity.
+SSWP = ProcessingFn(
+    name="sswp",
+    edge_update=lambda s, w: jnp.minimum(s, w),
+    better=lambda a, b: a > b,
+    reduce=jnp.maximum,
+    worst=float("-inf"),
+)
+
+PROCESSING_FNS = {p.name: p for p in (SSSP, BFS, CC, SSWP)}

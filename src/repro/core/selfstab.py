@@ -1,0 +1,69 @@
+"""The self-stabilizing SSSP kernel itself (paper Algorithm 1,
+Huang & Lin 2002), executed under a synchronous demon.
+
+    R0:  d(r) ≠ 0                     → d(r) := 0
+    R1:  d(i) ≠ min_j (d(j) + w(i,j)) → d(i) := min_j (d(j) + w(i,j))
+
+Note R1 *replaces* the state (it can RAISE d(i)) — that is what makes
+the algorithm self-stabilizing: started from an arbitrary corrupted
+state it still converges to the shortest-path fixpoint.  The AGM
+engine (engine.py) is the paper's *stabilizing* derivation of this
+kernel (monotone decrease from a specific initial state + ordering);
+this module keeps the original rule as (a) the semantic ground truth
+the AGM engine is tested against and (b) the dense synchronous sweep
+whose hot loop is the Pallas `relax_ell` kernel (pull-mode min-plus
+over in-edges).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.formats import Graph, coo_to_csr, csr_to_ell
+from repro.graph.partition import chunk_fat_rows
+from repro.kernels.relax_ell import relax_rows
+
+
+def in_ell(g: Graph, width: int | None = None):
+    """ELL over *in*-edges (transpose), fat rows chunked; returns
+    (row_dst, col, wgt) where row_dst maps virtual rows -> vertex."""
+    gt = Graph(g.n, g.dst, g.src, g.weight, name=g.name + "^T")
+    csr = coo_to_csr(gt)
+    w = width or max(1, min(64, csr.max_degree()))
+    return chunk_fat_rows(csr, w, pad_col=g.n)
+
+
+def synchronous_sweep(
+    g: Graph,
+    source: int,
+    d0: np.ndarray,
+    iters: int,
+    *,
+    impl: str = "ref",
+) -> np.ndarray:
+    """Run `iters` synchronous applications of R0/R1 from state d0."""
+    row_dst, col, wgt = in_ell(g)
+    row_dst = jnp.asarray(row_dst)
+    col = jnp.asarray(col)
+    wgt = jnp.asarray(wgt)
+    n = g.n
+
+    d = jnp.asarray(d0, jnp.float32)
+
+    @jax.jit
+    def step(d):
+        d_ext = jnp.concatenate([d, jnp.array([jnp.inf])])
+        row_min = relax_rows(d_ext, col, wgt, impl=impl)  # (R,)
+        # combine virtual rows of the same vertex (fat-row chunking)
+        new = jnp.full((n + 1,), jnp.inf).at[row_dst].min(row_min)[:n]
+        new = new.at[source].set(0.0)  # rule R0
+        return new
+
+    for _ in range(iters):
+        d_next = step(d)
+        if bool(jnp.all(d_next == d)):
+            break
+        d = d_next
+    return np.asarray(d)

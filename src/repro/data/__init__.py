@@ -1,0 +1,12 @@
+"""Deterministic synthetic data pipelines.
+
+Every batch is a pure function of (seed, step), so training resumes
+after a checkpoint restore replay the exact same stream — the
+idempotent-resume property the fault-tolerance tests rely on.
+"""
+
+from repro.data.synthetic import (
+    lm_batch, mind_batch, gnn_flat_batch, molecule_batch,
+)
+
+__all__ = ["lm_batch", "mind_batch", "gnn_flat_batch", "molecule_batch"]

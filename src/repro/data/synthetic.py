@@ -1,0 +1,80 @@
+"""Synthetic deterministic batches (pure functions of seed and step)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+def lm_batch(step: int, batch: int, seq: int, vocab: int,
+             seed: int = 0) -> dict:
+    """Markov-ish token stream: next token depends on the previous one
+    so a small LM can actually reduce loss against it."""
+    rng = _rng(seed, step)
+    base = rng.integers(0, vocab, size=(batch, 1))
+    steps = rng.integers(1, 7, size=(batch, seq))
+    toks = (base + np.cumsum(steps, axis=1)) % vocab
+    toks = np.concatenate([base, toks], axis=1).astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def mind_batch(step: int, batch: int, cfg, seed: int = 0) -> dict:
+    rng = _rng(seed, step)
+    F = cfg.n_profile_fields * cfg.profile_multi
+    return {
+        "hist": rng.integers(0, cfg.n_items, (batch, cfg.hist_len)
+                             ).astype(np.int32),
+        "hist_mask": rng.random((batch, cfg.hist_len)) > 0.2,
+        "profile_ids": rng.integers(0, cfg.n_profile, (batch, F)
+                                    ).astype(np.int32),
+        "profile_mask": np.ones((batch, F), dtype=bool),
+        "target": rng.integers(0, cfg.n_items, (batch,)).astype(np.int32),
+        "negatives": rng.integers(
+            0, cfg.n_items, (batch, cfg.n_negatives)
+        ).astype(np.int32),
+    }
+
+
+def gnn_flat_batch(graph, d_feat: int, n_classes: int, *,
+                   coords: bool = False, triplets: bool = False,
+                   triplet_cap=4, seed: int = 0) -> dict:
+    from repro.models.gnn.batch import flat_batch_from_graph
+
+    fb = flat_batch_from_graph(
+        graph, d_feat, n_classes, with_coords=coords,
+        with_triplets=triplets, triplet_cap=triplet_cap, seed=seed,
+    )
+    out = {
+        "x": fb.x, "edge_src": fb.edge_src, "edge_dst": fb.edge_dst,
+        "edge_mask": fb.edge_mask, "labels": fb.labels,
+    }
+    if coords:
+        out["coords"] = fb.coords
+    if triplets:
+        out["tri_kj"] = fb.tri_kj
+        out["tri_ji"] = fb.tri_ji
+        out["tri_mask"] = fb.tri_mask
+    return out
+
+
+def molecule_batch(step: int, batch: int, n_atoms: int, n_edges: int,
+                   *, triplets: bool = False, triplet_pad: int = 512,
+                   seed: int = 0) -> dict:
+    from repro.models.gnn.batch import random_molecule_batch
+
+    mb = random_molecule_batch(
+        batch, n_atoms, n_edges, seed=seed + 7919 * step,
+        with_triplets=triplets, triplet_pad=triplet_pad,
+    )
+    out = {
+        "x": mb.x, "coords": mb.coords, "edge_src": mb.edge_src,
+        "edge_dst": mb.edge_dst, "edge_mask": mb.edge_mask, "y": mb.y,
+    }
+    if triplets:
+        out["tri_kj"] = mb.tri_kj
+        out["tri_ji"] = mb.tri_ji
+        out["tri_mask"] = mb.tri_mask
+    return out

@@ -1,0 +1,37 @@
+"""Graph substrate: formats, generators, partitioning, sampling.
+
+This package is the data layer for the AGM/EAGM engine (the paper's
+contribution) and for the assigned GNN architectures.  Everything is
+host-side numpy until `device_arrays()` / the partitioner hand padded,
+fixed-shape buffers to JAX.
+"""
+
+from repro.graph.formats import Graph, CSR, ELL, coo_to_csr, csr_to_ell
+from repro.graph.generators import (
+    rmat_graph,
+    rmat1,
+    rmat2,
+    grid_road_graph,
+    small_world_graph,
+    erdos_renyi_graph,
+)
+from repro.graph.partition import PartitionedGraph, partition_1d
+from repro.graph.sampler import FanoutSampler, SampledBlock
+
+__all__ = [
+    "Graph",
+    "CSR",
+    "ELL",
+    "coo_to_csr",
+    "csr_to_ell",
+    "rmat_graph",
+    "rmat1",
+    "rmat2",
+    "grid_road_graph",
+    "small_world_graph",
+    "erdos_renyi_graph",
+    "PartitionedGraph",
+    "partition_1d",
+    "FanoutSampler",
+    "SampledBlock",
+]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots (validated on CPU in
+interpret mode; `impl='pallas'` targets real TPUs).
+
+relax_ell        min-plus ELL relaxation — the paper's rule R1 / SSSP hot loop
+spmm_ell         neighbor aggregation (GNN SpMM regime)
+flash_attention  blockwise-softmax causal GQA (LM hot spot)
+embedding_bag    scalar-prefetch ragged gather+reduce (recsys hot path)
+"""
+
+from repro.kernels.relax_ell import relax_rows
+from repro.kernels.spmm_ell import aggregate_neighbors
+from repro.kernels.flash_attention import mha
+from repro.kernels.embedding_bag import bag_pool
+
+__all__ = ["relax_rows", "aggregate_neighbors", "mha", "bag_pool"]

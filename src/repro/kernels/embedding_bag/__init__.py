@@ -1,0 +1,7 @@
+from repro.kernels.embedding_bag.ops import bag_pool
+from repro.kernels.embedding_bag.ref import (
+    embedding_bag_ref,
+    embedding_bag_segment_ref,
+)
+
+__all__ = ["bag_pool", "embedding_bag_ref", "embedding_bag_segment_ref"]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: embedding-bag (ragged gather + weighted segment
+sum) — the recsys hot path (MIND user-history pooling).
+
+JAX has no native EmbeddingBag; this kernel is the TPU-native
+formulation.  Unlike relax/spmm (whose operand strips are VMEM-
+resident), the embedding table lives in HBM: a (1, d) table row per
+grid step is DMA'd into VMEM, with the row *selected by a scalar-
+prefetched index* (PrefetchScalarGridSpec) — the BlockSpec index map
+reads `idx[b, l]`, so the DMA engine streams exactly the rows the
+bags need while compute overlaps.  The output (1, d) bag block is
+revisited across the L inner steps and accumulated in place.
+
+Weighted sum; padding slots carry weight 0 (and index 0, a real row,
+which the zero weight annihilates).  mean is a host-side divide in
+ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, row_ref, w_ref, out_ref):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += row_ref[...] * w_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(
+    table: jax.Array,    # (V, d) f32
+    idx: jax.Array,      # (B, L) int32 rows per bag
+    w: jax.Array,        # (B, L) f32 per-sample weights (0 = padding)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    V, d = table.shape
+    B, L = idx.shape
+    grid = (B, L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, l, idx_ref: (idx_ref[b, l], 0)),
+            pl.BlockSpec((1, 1), lambda b, l, idx_ref: (b, l)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, l, idx_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        interpret=interpret,
+    )(idx, table, w)

@@ -1,0 +1,34 @@
+"""Public op: embedding bag (sum / mean) with backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def bag_pool(
+    table: jax.Array,
+    idx: jax.Array,
+    mask: jax.Array,
+    *,
+    mode: str = "mean",
+    impl: str = "ref",
+) -> jax.Array:
+    """Pool `table[idx]` per bag; `mask` marks valid slots."""
+    w = mask.astype(jnp.float32)
+    if impl == "ref":
+        s = embedding_bag_ref(table, idx, w)
+    else:
+        s = embedding_bag(
+            table, idx.astype(jnp.int32), w,
+            interpret=(impl == "pallas_interpret"),
+        )
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1.0)
+        return s / cnt
+    raise ValueError(mode)

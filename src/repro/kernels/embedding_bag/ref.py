@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for embedding_bag: take + weighted sum.
+
+This is also the implementation pattern recommended for plain-XLA
+paths (jnp.take + segment reduce), used by the MIND model when the
+Pallas backend is off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, idx, w):
+    rows = jnp.take(table, idx, axis=0)  # (B, L, d)
+    return jnp.sum(rows * w[..., None], axis=1)
+
+
+def embedding_bag_segment_ref(table, flat_idx, segment_ids, w, num_bags):
+    """Ragged formulation via segment_sum (CSR-style offsets upstream)."""
+    rows = jnp.take(table, flat_idx, axis=0) * w[:, None]
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)

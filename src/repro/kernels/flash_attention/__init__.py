@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["mha", "attention_ref"]

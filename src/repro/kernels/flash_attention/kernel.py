@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: blockwise-softmax (flash) attention, causal GQA.
+
+The LM hot spot for the five assigned transformer architectures.
+Standard two-pass-free streaming softmax: for each (batch·q-head,
+q-block), iterate kv-blocks keeping running max m, normalizer l and
+accumulator acc in VMEM scratch; finalize on the last kv step.
+
+TPU mapping: q/k/v tiles are (BQ, D)/(BK, D) with D = head_dim (128 —
+MXU-aligned); the (BQ, BK) score tile hits the MXU, the running-stat
+updates run on the VPU.  GQA is expressed in the BlockSpec index maps:
+the kv operand's head index is q_head // group, so no KV replication
+is materialized.  Causal masking is positionwise inside the
+tile; tiles entirely above the diagonal skip compute via pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # python scalar: avoids a captured-constant in the kernel
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i, *, scale,
+                 causal, block_q, block_k, q_offset):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    # absolute query positions are offset by (Sk - Sq) when the KV
+    # prefix is longer than the query block (prefix/cross decode)
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+    # visit only tiles that intersect the lower triangle when causal
+    run = (k_start <= q_start + block_q - 1) if causal else (ki >= 0)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)  # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (BQ, BK)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_i[...] = l_i[...] * alpha + jnp.sum(p, axis=1)
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_i[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_i[...], 1e-30)
+        o_ref[0] = (acc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk)
+    scale = 1.0 / (D ** 0.5)
+
+    grid = (B * Hq, Sq // block_q, Sk // block_k)
+
+    def q_map(h, qi, ki):
+        return (h, qi, 0)
+
+    def kv_map(h, qi, ki):
+        return (h // group, ki, 0)
+
+    qr = q.reshape(B * Hq, Sq, D)
+    kr = k.reshape(B * Hkv, Sk, D)
+    vr = v.reshape(B * Hkv, Sk, D)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, q_offset=Sk - Sq,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Sq, D)

@@ -1,0 +1,26 @@
+"""Public op: multi-head (GQA) attention with backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    impl: str = "ref",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )

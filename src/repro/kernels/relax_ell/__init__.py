@@ -1,0 +1,4 @@
+from repro.kernels.relax_ell.ops import relax_rows
+from repro.kernels.relax_ell.ref import relax_ell_ref
+
+__all__ = ["relax_rows", "relax_ell_ref"]

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: blocked min-plus ELL relaxation (SSSP hot loop).
+
+This is the vectorized form of the self-stabilizing rule R1 of the
+paper's Algorithm 1:
+
+    d(i) := min_{j ∈ N(i)} ( d(j) + w(i, j) )
+
+in pull mode over a padded in-neighbor ELL adjacency.  It is the
+per-superstep compute hot spot of the dense (chaotic / synchronous-
+demon) sweep and the on-device half of every AGM relax step.
+
+TPU mapping (DESIGN.md hardware-adaptation): rows are blocked to
+``block_rows`` so that the (block_rows, width) index/weight tiles and
+the gathered distance tile live in VMEM; the distance vector is kept
+VMEM-resident as a single block (per-device vertex slices after the
+1D partition are ≤ a few hundred thousand vertices — well inside
+VMEM).  The gather `d[col]` is a VMEM-local vector gather; the min-
+reduction along the width axis runs on the VPU (8x128 lanes), so
+`width` should be a multiple of 8 and `block_rows` a multiple of 128
+for full-lane utilization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relax_kernel(d_ref, col_ref, wgt_ref, out_ref):
+    """One grid step: rows [i*BR, (i+1)*BR).  All refs in VMEM."""
+    d = d_ref[...]          # (n_pad,)  distance vector (whole, resident)
+    col = col_ref[...]      # (BR, W)   neighbor ids (padded -> n_pad)
+    wgt = wgt_ref[...]      # (BR, W)   weights (padded -> +inf)
+    gathered = jnp.take(d, col, axis=0)       # (BR, W) VMEM gather
+    cand = gathered + wgt                      # min-plus product
+    out_ref[...] = jnp.min(cand, axis=1)       # (BR,) VPU reduction
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret")
+)
+def relax_ell(
+    dist: jax.Array,       # (n_pad + 1,) f32; slot n_pad = +inf pad target
+    col: jax.Array,        # (R, W) int32 in-neighbor ids
+    wgt: jax.Array,        # (R, W) f32, +inf padding
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (R,) f32: min-plus reduction per row (no self term —
+    callers combine with the current state via jnp.minimum)."""
+    R, W = col.shape
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(dist.shape, lambda i: (0,)),          # resident
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.float32),
+        interpret=interpret,
+    )(dist, col, wgt)

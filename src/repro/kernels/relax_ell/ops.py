@@ -1,0 +1,43 @@
+"""Public op: min-plus ELL relaxation with padding/shape handling.
+
+`relax_rows(...)` pads the row count to the block size, dispatches to
+the Pallas kernel (TPU) or the jnp reference (CPU / correctness), and
+strips the padding.  Backend selection is explicit so the distributed
+engine and the dry-run (which must produce plain-XLA HLO) can choose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.relax_ell.kernel import relax_ell
+from repro.kernels.relax_ell.ref import relax_ell_ref
+
+
+def relax_rows(
+    dist: jax.Array,
+    col: jax.Array,
+    wgt: jax.Array,
+    *,
+    impl: str = "ref",        # 'ref' | 'pallas' | 'pallas_interpret'
+    block_rows: int = 256,
+) -> jax.Array:
+    R, W = col.shape
+    if impl == "ref":
+        return relax_ell_ref(dist, col, wgt)
+    pad = (-R) % block_rows
+    if pad:
+        n_pad = dist.shape[0] - 1
+        col = jnp.concatenate(
+            [col, jnp.full((pad, W), n_pad, dtype=col.dtype)]
+        )
+        wgt = jnp.concatenate(
+            [wgt, jnp.full((pad, W), jnp.inf, dtype=wgt.dtype)]
+        )
+    out = relax_ell(
+        dist, col, wgt,
+        block_rows=block_rows,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out[:R]

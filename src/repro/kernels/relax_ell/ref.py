@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the relax_ell kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def relax_ell_ref(dist: jax.Array, col: jax.Array, wgt: jax.Array):
+    """out[r] = min_s dist[col[r, s]] + wgt[r, s]."""
+    return jnp.min(jnp.take(dist, col, axis=0) + wgt, axis=1)

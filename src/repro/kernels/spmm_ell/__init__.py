@@ -1,0 +1,4 @@
+from repro.kernels.spmm_ell.ops import aggregate_neighbors
+from repro.kernels.spmm_ell.ref import spmm_ell_ref
+
+__all__ = ["aggregate_neighbors", "spmm_ell_ref"]

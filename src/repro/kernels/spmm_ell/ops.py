@@ -1,0 +1,38 @@
+"""Public op: ELL SpMM with padding and backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm_ell.kernel import spmm_ell
+from repro.kernels.spmm_ell.ref import spmm_ell_ref
+
+
+def aggregate_neighbors(
+    x: jax.Array,
+    col: jax.Array,
+    wgt: jax.Array,
+    *,
+    op: str = "sum",
+    impl: str = "ref",
+    block_rows: int = 128,
+    block_feat: int = 128,
+) -> jax.Array:
+    """reduce_s x[col[r,s]] * wgt[r,s] with shape padding handled."""
+    if impl == "ref":
+        return spmm_ell_ref(x, col, wgt, op)
+    R, W = col.shape
+    n_x, d = x.shape
+    pad_r = (-R) % block_rows
+    pad_d = (-d) % block_feat
+    if pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_d)))
+    if pad_r:
+        col = jnp.pad(col, ((0, pad_r), (0, 0)), constant_values=n_x - 1)
+        wgt = jnp.pad(wgt, ((0, pad_r), (0, 0)))
+    out = spmm_ell(
+        x, col, wgt, op=op, block_rows=block_rows, block_feat=block_feat,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out[:R, :d]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for spmm_ell."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ell_ref(x, col, wgt, op: str = "sum"):
+    g = jnp.take(x, col, axis=0)  # (R, W, d)
+    if op == "sum":
+        return jnp.sum(g * wgt[..., None], axis=1)
+    if op == "max":
+        masked = jnp.where((wgt > 0)[..., None], g, -jnp.inf)
+        return jnp.max(masked, axis=1)
+    raise ValueError(op)

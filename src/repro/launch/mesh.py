@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant)
+so importing this module never touches jax device state; the dry-run
+sets the 512-placeholder-device XLA flag before first jax init.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.models.common import Topology
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_topology(*, multi_pod: bool = False) -> Topology:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return Topology(mesh=mesh, dp_axes=dp, tp_axis="model")
+
+
+def make_cpu_topology(n: Optional[int] = None, tp: int = 1) -> Topology:
+    """Small mesh over however many (host) devices exist — used by
+    tests and CPU examples."""
+    n = n or jax.device_count()
+    dp = n // tp
+    if tp > 1:
+        mesh = jax.make_mesh((dp, tp), ("data", "model"))
+        return Topology(mesh=mesh, dp_axes=("data",), tp_axis="model")
+    mesh = jax.make_mesh((dp,), ("data",))
+    return Topology(mesh=mesh, dp_axes=("data",), tp_axis=None)

@@ -1,0 +1,168 @@
+"""Shared model building blocks: topology, norms, RoPE, init, sharding.
+
+The framework separates the *logical* model from its *placement*: a
+:class:`Topology` names the mesh axes used for data parallelism
+(pod × data → "dp"), tensor/expert parallelism ("tp") and, for long-
+context decode, sequence parallelism over the KV cache.  Models emit
+`PartitionSpec` trees keyed off the topology, and internal activation
+shardings are pinned with `with_sharding_constraint` so GSPMD's
+choices match the design (Megatron TP + FSDP + sequence-sharded
+residual stream).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Mesh + axis-role mapping.
+
+    dp_axes: axes that shard the batch (and FSDP-shard params).
+    tp_axis: axis for tensor/expert parallelism (None = no TP).
+    """
+
+    mesh: Mesh
+    dp_axes: tuple = ("data",)
+    tp_axis: Optional[str] = "model"
+
+    @property
+    def axis_names(self) -> tuple:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def tp_size(self) -> int:
+        if self.tp_axis is None or self.tp_axis not in self.axis_names:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(list(self.mesh.shape.values())))
+
+    @property
+    def all_axes(self) -> tuple:
+        return tuple(self.mesh.axis_names)
+
+    def tp(self):
+        return self.tp_axis
+
+    def spec(self, *axes) -> P:
+        """PartitionSpec, dropping axis roles the mesh doesn't have."""
+        out = []
+        for a in axes:
+            if a == "dp":
+                out.append(self.dp)
+            elif a == "tp":
+                out.append(self.tp_axis if self.tp_size > 1 else None)
+            elif a == "all":
+                out.append(self.all_axes)
+            else:
+                out.append(a)
+        return P(*out)
+
+
+def single_device_topology() -> Topology:
+    mesh = jax.make_mesh((1,), ("data",))
+    return Topology(mesh=mesh, dp_axes=("data",), tp_axis=None)
+
+
+def constrain(x, topo: Topology, *axes):
+    """with_sharding_constraint via the topology's axis roles."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(topo.mesh, topo.spec(*axes))
+    )
+
+
+# ----------------------------------------------------------------- #
+# numerics
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        dtype
+    )
+
+
+def rope_angles(positions, dim: int, theta: float = 10000.0):
+    """(..., dim/2) cos/sin tables for rotary embedding."""
+    freqs = jnp.exp(
+        -math.log(theta)
+        * jnp.arange(0, dim, 2, dtype=jnp.float32)
+        / dim
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (S, D/2) or broadcastable."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    # broadcast cos/sin over head axis
+    while cos.ndim < x1.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def relu2(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+# ----------------------------------------------------------------- #
+# initialization
+
+
+def normal_init(key, shape, scale: float, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def fan_in_init(key, shape, fan_in: Optional[int] = None,
+                dtype=jnp.float32):
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[-1]
+    return normal_init(key, shape, 1.0 / math.sqrt(fan), dtype)
+
+
+def split_keys(key, names: Sequence[str]) -> dict:
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))
+
+
+def param_count(params) -> int:
+    return int(
+        sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params))
+    )
+
+
+def tree_bytes(params) -> int:
+    return int(
+        sum(
+            np.prod(p.shape) * p.dtype.itemsize
+            for p in jax.tree_util.tree_leaves(params)
+        )
+    )

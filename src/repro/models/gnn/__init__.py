@@ -1,0 +1,25 @@
+"""Assigned GNN architectures (DESIGN.md §Arch-applicability: they
+share the graph substrate with the AGM engine — 1D partition, segment
+ops, the spmm_ell kernel — but the paper's *ordering* contribution is
+inapplicable: GNN layers are bulk-synchronous, i.e. exactly the
+Chaotic / synchronous-demon special case of the AGM)."""
+
+from repro.models.gnn import gin, egnn, dimenet, mace
+from repro.models.gnn.gin import GINConfig
+from repro.models.gnn.egnn import EGNNConfig
+from repro.models.gnn.dimenet import DimeNetConfig
+from repro.models.gnn.mace import MACEConfig
+from repro.models.gnn.batch import (
+    FlatGraphBatch,
+    PackedGraphBatch,
+    build_triplets,
+    flat_batch_from_graph,
+    random_molecule_batch,
+)
+
+__all__ = [
+    "gin", "egnn", "dimenet", "mace",
+    "GINConfig", "EGNNConfig", "DimeNetConfig", "MACEConfig",
+    "FlatGraphBatch", "PackedGraphBatch", "build_triplets",
+    "flat_batch_from_graph", "random_molecule_batch",
+]

@@ -1,0 +1,203 @@
+"""Device-side graph batch containers + host-side builders.
+
+Two layouts:
+
+* flat — one (possibly huge) graph: x (N, d), edge_src/dst (E,),
+  used by full_graph_sm / ogb_products / minibatch_lg (the sampled
+  block is flattened).  N and E axes shard over the whole mesh.
+* packed — batched small graphs (molecule cell): (B, n, d) features
+  and (B, e) edges; B shards over the mesh.
+
+Geometric models additionally carry coords (…, 3).  DimeNet needs
+triplet index lists (kj → ji pairs sharing the middle vertex); for
+large graphs triplets are capped per edge (host-side sampling) —
+DimeNet is a molecular model, running it on web-scale graphs requires
+truncation (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.graph.formats import Graph, coo_to_csr
+
+
+@dataclasses.dataclass
+class FlatGraphBatch:
+    """Flat single-graph batch (numpy host side; jnp on device)."""
+
+    x: np.ndarray          # (N, d) node features
+    edge_src: np.ndarray   # (E,)
+    edge_dst: np.ndarray   # (E,)
+    edge_mask: np.ndarray  # (E,) bool
+    labels: np.ndarray     # (N,) int labels (or regression targets)
+    coords: Optional[np.ndarray] = None  # (N, 3)
+    # triplets: for edge e2=(j->i), indices of edges e1=(k->j)
+    tri_kj: Optional[np.ndarray] = None  # (T,) edge ids k->j
+    tri_ji: Optional[np.ndarray] = None  # (T,) edge ids j->i
+    tri_mask: Optional[np.ndarray] = None
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def e(self) -> int:
+        return self.edge_src.shape[0]
+
+
+@dataclasses.dataclass
+class PackedGraphBatch:
+    """Batched small graphs (molecule cell)."""
+
+    x: np.ndarray          # (B, n, d)
+    edge_src: np.ndarray   # (B, e)
+    edge_dst: np.ndarray   # (B, e)
+    edge_mask: np.ndarray  # (B, e)
+    coords: np.ndarray     # (B, n, 3)
+    y: np.ndarray          # (B,) regression target (energy)
+    tri_kj: Optional[np.ndarray] = None  # (B, T)
+    tri_ji: Optional[np.ndarray] = None
+    tri_mask: Optional[np.ndarray] = None
+
+
+def build_triplets(
+    edge_src: np.ndarray,
+    edge_dst: np.ndarray,
+    n: int,
+    cap_per_edge: Optional[int] = None,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """For each edge e2 = (j -> i), pair it with incoming edges
+    e1 = (k -> j), k != i.  Returns (tri_kj, tri_ji) edge-id arrays.
+    ``cap_per_edge`` bounds pairs per e2 by random subsampling."""
+    rng = np.random.default_rng(seed)
+    E = edge_src.shape[0]
+    # incoming edge ids per vertex
+    order = np.argsort(edge_dst, kind="stable")
+    sorted_dst = edge_dst[order]
+    starts = np.searchsorted(sorted_dst, np.arange(n), side="left")
+    ends = np.searchsorted(sorted_dst, np.arange(n), side="right")
+    tri_kj, tri_ji = [], []
+    for e2 in range(E):
+        j = edge_src[e2]
+        i = edge_dst[e2]
+        inc = order[starts[j]:ends[j]]             # edges (* -> j)
+        inc = inc[edge_src[inc] != i]              # exclude backtrack
+        if cap_per_edge is not None and inc.shape[0] > cap_per_edge:
+            inc = rng.choice(inc, size=cap_per_edge, replace=False)
+        tri_kj.extend(int(v) for v in inc)
+        tri_ji.extend([e2] * inc.shape[0])
+    return (
+        np.asarray(tri_kj, dtype=np.int32),
+        np.asarray(tri_ji, dtype=np.int32),
+    )
+
+
+def flat_batch_from_graph(
+    g: Graph,
+    d_feat: int,
+    n_classes: int,
+    *,
+    with_coords: bool = False,
+    with_triplets: bool = False,
+    triplet_cap: Optional[int] = 4,
+    seed: int = 0,
+) -> FlatGraphBatch:
+    """Synthetic features/labels over a real topology (the container
+    has no dataset downloads; shapes and sparsity patterns are what
+    matter for the system)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(g.n, d_feat)).astype(np.float32)
+    labels = rng.integers(0, n_classes, size=g.n).astype(np.int32)
+    coords = (
+        rng.normal(size=(g.n, 3)).astype(np.float32)
+        if with_coords else None
+    )
+    tri_kj = tri_ji = tri_mask = None
+    if with_triplets:
+        tri_kj, tri_ji = build_triplets(
+            g.src, g.dst, g.n, cap_per_edge=triplet_cap, seed=seed
+        )
+        tri_mask = np.ones(tri_kj.shape[0], dtype=bool)
+    return FlatGraphBatch(
+        x=x, edge_src=g.src, edge_dst=g.dst,
+        edge_mask=np.ones(g.m, dtype=bool), labels=labels,
+        coords=coords, tri_kj=tri_kj, tri_ji=tri_ji, tri_mask=tri_mask,
+    )
+
+
+def random_molecule_batch(
+    batch: int, n_atoms: int, n_edges: int, n_species: int = 10,
+    seed: int = 0, with_triplets: bool = False, triplet_pad: int = 512,
+) -> PackedGraphBatch:
+    """Random molecular graphs: kNN-ish edges over random coords."""
+    rng = np.random.default_rng(seed)
+    coords = rng.normal(size=(batch, n_atoms, 3)).astype(np.float32) * 2.0
+    species = rng.integers(0, n_species, size=(batch, n_atoms))
+    x = np.eye(n_species, dtype=np.float32)[species]
+    es = np.zeros((batch, n_edges), dtype=np.int32)
+    ed = np.zeros((batch, n_edges), dtype=np.int32)
+    em = np.ones((batch, n_edges), dtype=bool)
+    for b in range(batch):
+        d = np.linalg.norm(
+            coords[b][:, None] - coords[b][None, :], axis=-1
+        ) + np.eye(n_atoms) * 1e9
+        k = max(1, n_edges // n_atoms)
+        nbr = np.argsort(d, axis=1)[:, :k]
+        src = np.repeat(np.arange(n_atoms), k)
+        dst = nbr.reshape(-1)
+        m = src.shape[0]
+        if m >= n_edges:
+            es[b], ed[b] = src[:n_edges], dst[:n_edges]
+        else:
+            es[b, :m], ed[b, :m] = src, dst
+            em[b, m:] = False
+    y = rng.normal(size=(batch,)).astype(np.float32)
+    tk = tj = tm = None
+    if with_triplets:
+        tk = np.zeros((batch, triplet_pad), dtype=np.int32)
+        tj = np.zeros((batch, triplet_pad), dtype=np.int32)
+        tm = np.zeros((batch, triplet_pad), dtype=bool)
+        for b in range(batch):
+            kj, ji = build_triplets(es[b], ed[b], n_atoms, seed=seed)
+            t = min(triplet_pad, kj.shape[0])
+            tk[b, :t], tj[b, :t], tm[b, :t] = kj[:t], ji[:t], True
+    return PackedGraphBatch(
+        x=x, edge_src=es, edge_dst=ed, edge_mask=em,
+        coords=coords, y=y, tri_kj=tk, tri_ji=tj, tri_mask=tm,
+    )
+
+
+def align_segments(
+    values_idx: np.ndarray,   # (T,) e.g. tri_kj — payload index list
+    seg_ids: np.ndarray,      # (T,) sorted target segment ids
+    n_segments: int,
+    n_shards: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Owner-align a sorted segment-indexed list for the shard_map
+    local reduction (layers.scatter_sum_owner_aligned): entries whose
+    target falls in shard p's segment range [p·n/P, (p+1)·n/P) are
+    placed in shard p's chunk; chunks are padded to a common length
+    (mask False, seg id = start of range so local ids stay in range).
+
+    Returns (values_idx', seg_ids', mask') each (P·chunk,)."""
+    assert n_segments % n_shards == 0
+    n_loc = n_segments // n_shards
+    bounds = np.searchsorted(seg_ids, np.arange(0, n_segments + 1, n_loc))
+    chunk = int(max(1, (np.diff(bounds)).max()))
+    P = n_shards
+    vi = np.zeros(P * chunk, dtype=values_idx.dtype)
+    si = np.zeros(P * chunk, dtype=seg_ids.dtype)
+    mk = np.zeros(P * chunk, dtype=bool)
+    for p in range(P):
+        lo, hi = bounds[p], bounds[p + 1]
+        m = hi - lo
+        vi[p * chunk : p * chunk + m] = values_idx[lo:hi]
+        si[p * chunk : p * chunk + m] = seg_ids[lo:hi]
+        si[p * chunk + m : (p + 1) * chunk] = p * n_loc  # in-range pad
+        mk[p * chunk : p * chunk + m] = True
+    return vi, si, mk

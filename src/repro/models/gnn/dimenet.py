@@ -1,0 +1,190 @@
+"""DimeNet (directional message passing, arXiv:2003.03123).
+
+Edge-based messages m_ji with *triplet* interactions: the update of
+message m_ji aggregates, over incoming edges k→j, the source message
+m_kj modulated by a radial×angular basis of (d_kj, angle(kj, ji)) and
+a bilinear layer — the triplet-gather kernel regime that plain SpMM
+cannot express.
+
+Assigned config: 6 blocks, d_hidden 128, n_bilinear 8, n_spherical 7,
+n_radial 6.  Simplification vs the paper (DESIGN.md): the 2D
+spherical-Bessel basis j_l(z_ln r) is replaced by the separable
+bessel(n_radial) ⊗ Legendre_l(cos α) product (same tensor shape and
+information structure; avoids root-finding for Bessel zeros).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.geometry import bessel_basis, cosine_cutoff
+from repro.models.gnn.layers import (
+    init_mlp, mlp_apply, scatter_sum, scatter_sum_owner_aligned,
+)
+from repro.models.common import fan_in_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    d_in: int = 10           # species one-hot
+    n_classes: int = 0       # 0 -> regression readout
+    # §Perf H2 iter 3: message/edge tensors in bf16 halve the gather-
+    # side collective + HBM bytes on web-scale graphs; bases and the
+    # readout stay f32.
+    msg_dtype: str = "float32"
+
+
+def _legendre(cos_a, n: int):
+    """P_0..P_{n-1}(cos α) via the recurrence, stacked (..., n)."""
+    p0 = jnp.ones_like(cos_a)
+    if n == 1:
+        return p0[..., None]
+    ps = [p0, cos_a]
+    for l in range(2, n):
+        ps.append(
+            ((2 * l - 1) * cos_a * ps[-1] - (l - 1) * ps[-2]) / l
+        )
+    return jnp.stack(ps[:n], axis=-1)
+
+
+def init_params(key, cfg: DimeNetConfig) -> dict:
+    d, nb = cfg.d_hidden, cfg.n_bilinear
+    n_sbf = cfg.n_radial * cfg.n_spherical
+    ks = jax.random.split(key, 6 * cfg.n_blocks + 4)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = ks[6 * i : 6 * (i + 1)]
+        blocks.append(
+            {
+                "w_rbf": fan_in_init(k[0], (cfg.n_radial, d), cfg.n_radial),
+                "w_sbf": fan_in_init(k[1], (n_sbf, nb), n_sbf),
+                "w_kj": init_mlp(k[2], [d, d]),
+                "bilinear": fan_in_init(k[3], (nb, d, d), d),
+                "mlp_update": init_mlp(k[4], [d, d, d]),
+                "out_atom": init_mlp(k[5], [d, d]),
+            }
+        )
+    return {
+        "blocks": blocks,
+        "embed_atom": init_mlp(ks[-1], [cfg.d_in, d]),
+        "embed_edge": init_mlp(ks[-2], [2 * d + cfg.n_radial, d]),
+        "readout": init_mlp(
+            ks[-3], [d, d, cfg.n_classes if cfg.n_classes > 0 else 1]
+        ),
+    }
+
+
+def forward(params, x, coords, edge_src, edge_dst, edge_mask,
+            tri_kj, tri_ji, tri_mask, cfg: DimeNetConfig):
+    """Returns per-node features (N, d) (sum of per-block outputs)."""
+    n = x.shape[0]
+    ew = edge_mask.astype(jnp.float32)[:, None]
+    tw = tri_mask.astype(jnp.float32)[:, None]
+
+    # ---- edge geometry + radial basis ----
+    vec = jnp.take(coords, edge_dst, axis=0) - jnp.take(
+        coords, edge_src, axis=0
+    )
+    dist = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    rbf = bessel_basis(dist, cfg.n_radial, cfg.cutoff) * cosine_cutoff(
+        dist, cfg.cutoff
+    )[:, None]
+
+    # ---- triplet geometry + angular basis ----
+    v_kj = jnp.take(vec, tri_kj, axis=0)
+    v_ji = jnp.take(vec, tri_ji, axis=0)
+    cos_a = jnp.sum(-v_kj * v_ji, axis=-1) / (
+        jnp.linalg.norm(v_kj + 1e-12, axis=-1)
+        * jnp.linalg.norm(v_ji + 1e-12, axis=-1)
+    )
+    d_kj = jnp.take(dist, tri_kj, axis=0)
+    sbf = (
+        bessel_basis(d_kj, cfg.n_radial, cfg.cutoff)[:, :, None]
+        * _legendre(jnp.clip(cos_a, -1, 1), cfg.n_spherical)[:, None, :]
+    ).reshape(tri_kj.shape[0], -1) * tw  # (T, n_radial*n_spherical)
+
+    # ---- embedding block ----
+    mdt = jnp.dtype(cfg.msg_dtype)
+    h = mlp_apply(params["embed_atom"], x, final_act=True)
+    m = (mlp_apply(
+        params["embed_edge"],
+        jnp.concatenate(
+            [jnp.take(h, edge_src, 0), jnp.take(h, edge_dst, 0), rbf], -1
+        ),
+        final_act=True,
+    ) * ew).astype(mdt)  # (E, d) directional messages
+    sbf = sbf.astype(mdt)
+    tw = tw.astype(mdt)
+    ew = ew.astype(mdt)
+
+    # ---- interaction blocks (triplet gather + bilinear) ----
+    node_out = jnp.zeros((n, cfg.d_hidden), jnp.float32)
+    E = m.shape[0]
+    for bp in params["blocks"]:
+        # the (T,) gather below is the collective hot spot at web
+        # scale; messages travel in cfg.msg_dtype (bf16 halves it)
+        m_kj = jnp.take(
+            mlp_apply(bp["w_kj"], m, final_act=True).astype(mdt),
+            tri_kj, axis=0,
+        )                                           # (T, d)
+        s = sbf @ bp["w_sbf"].astype(mdt)           # (T, nb)
+        contrib = jnp.einsum(
+            "tb,td,bdf->tf", s, m_kj, bp["bilinear"].astype(mdt),
+            preferred_element_type=jnp.float32,
+        ).astype(mdt)                               # (T, d)
+        # triplet lists are dst-ordered (build_triplets), so in
+        # distributed mode this reduces locally per shard — §Perf H2
+        agg = scatter_sum_owner_aligned(
+            contrib * tw, tri_ji, E
+        )                                           # (E, d)
+        gate = (rbf @ bp["w_rbf"]).astype(mdt)      # (E, d)
+        m = ((m + mlp_apply(bp["mlp_update"], agg * gate + m))
+             * ew).astype(mdt)
+        node_out = node_out + scatter_sum(
+            (mlp_apply(bp["out_atom"], m, final_act=True)
+             * ew).astype(jnp.float32),
+            edge_dst, n,
+        )
+    return node_out
+
+
+def energy(params, x, coords, es, ed, em, tk, tj, tm,
+           cfg: DimeNetConfig):
+    node = forward(params, x, coords, es, ed, em, tk, tj, tm, cfg)
+    return jnp.sum(mlp_apply(params["readout"], node))
+
+
+def regression_loss(params, batch, cfg: DimeNetConfig):
+    def one(x, c, es, ed, em, tk, tj, tm, y):
+        return (energy(params, x, c, es, ed, em, tk, tj, tm, cfg) - y) ** 2
+
+    losses = jax.vmap(one)(
+        batch["x"], batch["coords"], batch["edge_src"],
+        batch["edge_dst"], batch["edge_mask"], batch["tri_kj"],
+        batch["tri_ji"], batch["tri_mask"], batch["y"],
+    )
+    return jnp.mean(losses)
+
+
+def node_classification_loss(params, batch, cfg: DimeNetConfig):
+    node = forward(
+        params, batch["x"], batch["coords"], batch["edge_src"],
+        batch["edge_dst"], batch["edge_mask"], batch["tri_kj"],
+        batch["tri_ji"], batch["tri_mask"], cfg,
+    )
+    logits = mlp_apply(params["readout"], node).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, batch["labels"][:, None], axis=-1
+    )[:, 0]
+    return jnp.mean(logz - ll)

@@ -1,0 +1,180 @@
+"""MACE (higher-order equivariant message passing, arXiv:2206.07697).
+
+Assigned config: 2 layers, 128 channels, l_max = 2, correlation
+order 3, 8 radial Bessel functions, E(3)-equivariant ACE features.
+
+Structure per layer (the ACE "density trick"):
+
+  A_i^{c,lm} = Σ_{j∈N(i)} R_{c,l}(r_ij) · Y_lm(r̂_ij) · (W h_j)_c
+
+  B-features: symmetric contractions of A up to correlation order 3:
+    ν=1:  A_{c,00}                                    (1 / channel)
+    ν=2:  Σ_m A_{c,lm}²  for l = 0,1,2                (3 / channel,
+          the power spectrum)
+    ν=3:  Σ G[(l1m1),(l2m2),(l3m3)] A A A  per allowed
+          (l1,l2,l3) ∈ {(000),(011),(022),(112),(222)} (5 / channel,
+          the bispectrum; G = real Gaunt table, geometry.py)
+
+  h_i' = MLP([h_i, B_i])   (9 invariants per channel)
+
+Adaptation vs the full MACE (DESIGN.md §Arch-applicability): node
+features carry invariant (L=0) channels between layers — the
+"invariant readout" MACE variant; equivariance lives inside the
+A-features (verified by the rotation-invariance property test).  The
+generalized L>0 message carriers of full MACE add bookkeeping, not a
+different kernel regime (the contraction above IS the O(l_max^6)
+CG-product hot spot).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.geometry import (
+    LM_INDEX, N_LM, bessel_basis, cosine_cutoff, real_gaunt_table,
+    real_sph_harm_l2,
+)
+from repro.models.gnn.layers import init_mlp, mlp_apply, scatter_sum
+from repro.models.common import fan_in_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_in: int = 10
+    n_classes: int = 0
+
+
+# allowed (l1, l2, l3) bispectrum combos for l_max = 2 (even parity,
+# triangle inequality)
+_BIS_COMBOS = [(0, 0, 0), (0, 1, 1), (0, 2, 2), (1, 1, 2), (2, 2, 2)]
+
+
+def _combo_gaunt() -> np.ndarray:
+    """(5, 9, 9, 9) per-combo real-Gaunt tensors."""
+    G = real_gaunt_table()
+    ls = np.array([l for l, m in LM_INDEX])
+    out = np.zeros((len(_BIS_COMBOS),) + G.shape, np.float32)
+    for ci, (l1, l2, l3) in enumerate(_BIS_COMBOS):
+        mask = (
+            (ls[:, None, None] == l1)
+            & (ls[None, :, None] == l2)
+            & (ls[None, None, :] == l3)
+        )
+        out[ci] = np.where(mask, G, 0.0)
+    return out
+
+
+def init_params(key, cfg: MACEConfig) -> dict:
+    C = cfg.d_hidden
+    n_l = cfg.l_max + 1
+    ks = jax.random.split(key, 4 * cfg.n_layers + 2)
+    layers = []
+    n_inv = 1 + n_l + len(_BIS_COMBOS)  # A00 + power + bispectrum
+    for i in range(cfg.n_layers):
+        k = ks[4 * i : 4 * (i + 1)]
+        d_in = cfg.d_in if i == 0 else C
+        layers.append(
+            {
+                "w_h": fan_in_init(k[0], (d_in, C), d_in),
+                # radial MLP: bessel -> per (channel, l) weight
+                "radial": init_mlp(k[1], [cfg.n_rbf, 32, C * n_l]),
+                "update": init_mlp(k[2], [C * n_inv + d_in, C, C]),
+            }
+        )
+    return {
+        "layers": layers,
+        "readout": init_mlp(
+            ks[-1], [C, C, cfg.n_classes if cfg.n_classes > 0 else 1]
+        ),
+    }
+
+
+def forward(params, x, coords, edge_src, edge_dst, edge_mask,
+            cfg: MACEConfig):
+    """Returns invariant node features (N, C)."""
+    n = x.shape[0]
+    C = cfg.d_hidden
+    n_l = cfg.l_max + 1
+    ew = edge_mask.astype(jnp.float32)
+
+    vec = jnp.take(coords, edge_dst, axis=0) - jnp.take(
+        coords, edge_src, axis=0
+    )
+    dist = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    unit = vec / jnp.maximum(dist, 1e-9)[:, None]
+    Y = real_sph_harm_l2(unit)                      # (E, 9)
+    rbf = bessel_basis(dist, cfg.n_rbf, cfg.cutoff) * cosine_cutoff(
+        dist, cfg.cutoff
+    )[:, None]
+
+    ls = jnp.asarray([l for l, m in LM_INDEX])       # (9,)
+    Gk = jnp.asarray(_combo_gaunt())                 # (5, 9, 9, 9)
+
+    h = x
+    for lp in params["layers"]:
+        hm = h @ lp["w_h"]                           # (N, C)
+        R = mlp_apply(lp["radial"], rbf).reshape(-1, C, n_l)  # (E,C,n_l)
+        R_lm = jnp.take(R, ls, axis=2)               # (E, C, 9)
+        msg = (
+            jnp.take(hm, edge_src, axis=0)[:, :, None]
+            * R_lm
+            * Y[:, None, :]
+            * ew[:, None, None]
+        )                                            # (E, C, 9)
+        A = scatter_sum(msg, edge_dst, n)            # (N, C, 9)
+
+        # --- symmetric contractions (ACE product basis) ---
+        b1 = A[:, :, 0:1]                            # ν=1 (N, C, 1)
+        # ν=2: power spectrum per l (one-hot l-group sum over m)
+        l_onehot = (ls[:, None] == jnp.arange(n_l)[None, :]).astype(
+            A.dtype
+        )                                            # (9, n_l)
+        b2 = jnp.einsum("ncm,ml->ncl", A * A, l_onehot)  # (N, C, n_l)
+        # ν=3: bispectrum per allowed l-combo (real Gaunt contraction)
+        b3 = jnp.einsum("kabc,nxa,nxb,nxc->nxk", Gk, A, A, A)  # (N,C,5)
+        B = jnp.concatenate([b1, b2, b3], axis=-1)   # (N, C, 9)
+        h = mlp_apply(
+            lp["update"],
+            jnp.concatenate([B.reshape(n, -1), h], axis=-1),
+        )
+    return h
+
+
+def energy(params, x, coords, es, ed, em, cfg: MACEConfig):
+    h = forward(params, x, coords, es, ed, em, cfg)
+    return jnp.sum(mlp_apply(params["readout"], h))
+
+
+def regression_loss(params, batch, cfg: MACEConfig):
+    def one(x, c, es, ed, em, y):
+        return (energy(params, x, c, es, ed, em, cfg) - y) ** 2
+
+    losses = jax.vmap(one)(
+        batch["x"], batch["coords"], batch["edge_src"],
+        batch["edge_dst"], batch["edge_mask"], batch["y"],
+    )
+    return jnp.mean(losses)
+
+
+def node_classification_loss(params, batch, cfg: MACEConfig):
+    h = forward(
+        params, batch["x"], batch["coords"], batch["edge_src"],
+        batch["edge_dst"], batch["edge_mask"], cfg,
+    )
+    logits = mlp_apply(params["readout"], h).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, batch["labels"][:, None], axis=-1
+    )[:, 0]
+    return jnp.mean(logz - ll)

@@ -1,0 +1,693 @@
+"""Config-driven decoder-only transformer LM family.
+
+Covers the five assigned architectures through one implementation:
+  phi3-mini / minitron  — dense GQA (SwiGLU or squared-ReLU MLP)
+  minicpm3              — MLA (latent-compressed KV, absorbed decode)
+  phi3.5-moe / dbrx     — GQA + token-choice top-k MoE (EP-as-TP)
+
+Distribution (DESIGN.md §6): Megatron TP over heads/ffn/vocab on the
+`tp` axis, FSDP over the dp axes, sequence-parallel residual stream
+(constrained S-sharding between blocks), MoE experts on `tp` via
+:mod:`repro.models.moe`.  Long-context decode shards the KV cache
+over the sequence axis (SP decode) so no full-length score tensor is
+ever materialized on one chip.
+
+Steps exposed (all pure functions of (params, batch)):
+  lm_loss      — training loss (chunked vocab CE, no (B,S,V) f32 blowup)
+  prefill_step — build KV cache from a prompt, last-position logits
+  decode_step  — one token against a full cache (the decode_* and
+                 long_* shape cells lower THIS, not train_step)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    Topology,
+    apply_rope,
+    constrain,
+    fan_in_init,
+    normal_init,
+    rms_norm,
+    rope_angles,
+    relu2,
+    swiglu,
+)
+from repro.models.moe import MoEConfig, moe_ffn
+from repro.kernels.flash_attention import mha as mha_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    mlp_type: str = "swiglu"          # 'swiglu' | 'relu2'
+    attn_type: str = "gqa"            # 'gqa' | 'mla'
+    moe: Optional[MoEConfig] = None
+    # --- MLA (minicpm3) ---
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    # --- misc ---
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    remat: str = "full"               # 'none' | 'full'
+    attn_impl: str = "xla"            # 'xla' | 'xla_flash' | 'pallas*'
+    attn_chunk: int = 1024            # kv chunk for xla_flash
+    loss_chunk: int = 512             # seq chunk for vocab CE
+    seq_shard_resid: bool = True      # Megatron-style sequence parallelism
+    scan_layers: bool = True          # False: python-unrolled (probes)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def n_params(self) -> int:
+        d, f, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        if self.attn_type == "mla":
+            qk = self.qk_nope_dim + self.qk_rope_dim
+            attn = (
+                d * self.q_lora_rank
+                + self.q_lora_rank * self.n_heads * qk
+                + d * (self.kv_lora_rank + self.qk_rope_dim)
+                + self.kv_lora_rank * self.n_heads
+                * (self.qk_nope_dim + self.v_head_dim)
+                + self.n_heads * self.v_head_dim * d
+            )
+        else:
+            dh = self.head_dim
+            attn = d * self.n_heads * dh + 2 * d * self.n_kv_heads * dh \
+                + self.n_heads * dh * d
+        if self.moe:
+            mlp = self.moe.n_experts * 3 * d * self.moe.d_ff + \
+                d * self.moe.n_experts
+        else:
+            mlp = (3 if self.mlp_type == "swiglu" else 2) * d * f
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + mlp) + emb
+
+    def n_active_params(self) -> int:
+        """Per-token active parameters (MoE counts top_k experts)."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        dense = self.n_params() - self.n_layers * (
+            self.moe.n_experts * 3 * d * self.moe.d_ff
+        )
+        return dense + self.n_layers * self.moe.top_k * 3 * d * self.moe.d_ff
+
+
+# ----------------------------------------------------------------- #
+# parameters
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    dt = cfg.dtype
+    L, d, f, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    keys = jax.random.split(key, 24)
+
+    def fi(k, shape, fan):
+        return fan_in_init(k, shape, fan, dt)
+
+    layers: dict = {
+        "ln1": jnp.ones((L, d), dt),
+        "ln2": jnp.ones((L, d), dt),
+    }
+    if cfg.attn_type == "gqa":
+        layers.update(
+            wq=fi(keys[0], (L, d, H * dh), d),
+            wk=fi(keys[1], (L, d, KV * dh), d),
+            wv=fi(keys[2], (L, d, KV * dh), d),
+            wo=fi(keys[3], (L, H * dh, d), H * dh),
+        )
+    else:  # mla
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        layers.update(
+            wq_a=fi(keys[0], (L, d, cfg.q_lora_rank), d),
+            q_norm=jnp.ones((L, cfg.q_lora_rank), dt),
+            wq_b=fi(keys[1], (L, cfg.q_lora_rank, H * qk),
+                    cfg.q_lora_rank),
+            wkv_a=fi(keys[2], (L, d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                     d),
+            kv_norm=jnp.ones((L, cfg.kv_lora_rank), dt),
+            wk_b=fi(keys[4], (L, cfg.kv_lora_rank, H * cfg.qk_nope_dim),
+                    cfg.kv_lora_rank),
+            wv_b=fi(keys[5], (L, cfg.kv_lora_rank, H * cfg.v_head_dim),
+                    cfg.kv_lora_rank),
+            wo=fi(keys[3], (L, H * cfg.v_head_dim, d), H * cfg.v_head_dim),
+        )
+    if cfg.moe:
+        E, fe = cfg.moe.n_experts, cfg.moe.d_ff
+        layers.update(
+            router=fi(keys[6], (L, d, E), d),
+            wg_e=fi(keys[7], (L, E, d, fe), d),
+            wu_e=fi(keys[8], (L, E, d, fe), d),
+            wd_e=fi(keys[9], (L, E, fe, d), fe),
+        )
+    else:
+        layers.update(
+            wg=fi(keys[7], (L, d, f), d),
+            wd=fi(keys[9], (L, f, d), f),
+        )
+        if cfg.mlp_type == "swiglu":
+            layers.update(wu=fi(keys[8], (L, d, f), d))
+
+    params = {
+        "embed": normal_init(keys[10], (V, d), 0.02, dt),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = fi(keys[11], (d, V), d)
+    return params
+
+
+def param_specs(cfg: LMConfig, topo: Topology) -> dict:
+    """PartitionSpec tree matching init_params: TP on heads/ffn/vocab
+    ('tp'), FSDP on the complementary dim ('dp')."""
+    s = topo.spec
+    layers: dict = {
+        "ln1": s(None, None),
+        "ln2": s(None, None),
+    }
+    if cfg.attn_type == "gqa":
+        layers.update(
+            wq=s(None, "dp", "tp"),
+            wk=s(None, "dp", "tp"),
+            wv=s(None, "dp", "tp"),
+            wo=s(None, "tp", "dp"),
+        )
+    else:
+        # §Perf iteration 1 (minicpm3 prefill): the MLA lora
+        # projections are small (q_lora 768 / kv_lora 256 wide), but
+        # FSDP-sharding their CONTRACTION dims made GSPMD all-reduce
+        # (B,S,H·d) activations — ~0.7 TB/layer/device on the 32k
+        # prefill.  Keep them replicated / TP-only instead: the whole
+        # MLA stack is ~14M params/layer, so replication costs ~1.7 GB
+        # per device for minicpm3 and removes the activation
+        # reductions entirely (weights are gathered, not activations).
+        layers.update(
+            wq_a=s(None, None, None),
+            q_norm=s(None, None),
+            wq_b=s(None, None, "tp"),
+            wkv_a=s(None, None, None),
+            kv_norm=s(None, None),
+            wk_b=s(None, None, "tp"),
+            wv_b=s(None, None, "tp"),
+            wo=s(None, "tp", "dp"),
+        )
+    if cfg.moe:
+        layers.update(
+            router=s(None, None, None),
+            wg_e=s(None, "tp", "dp", None),
+            wu_e=s(None, "tp", "dp", None),
+            wd_e=s(None, "tp", None, "dp"),
+        )
+    else:
+        layers.update(wg=s(None, "dp", "tp"), wd=s(None, "tp", "dp"))
+        if cfg.mlp_type == "swiglu":
+            layers.update(wu=s(None, "dp", "tp"))
+    specs = {
+        "embed": s("tp", "dp"),
+        "layers": layers,
+        "final_norm": s(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = s("dp", "tp")
+    return specs
+
+
+# ----------------------------------------------------------------- #
+# attention
+
+
+def _grouped_scores(q, k):
+    """q (B,S,H,dh), k (B,T,KV,dh) -> scores (B,KV,G,S,T) without
+    materializing head-expanded KV."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, dh)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _grouped_out(p, v):
+    """p (B,KV,G,S,T), v (B,T,KV,dh) -> (B,S,H,dh)."""
+    B, KV, G, S, T = p.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, KV * G, -1)
+
+
+def attention_xla(q, k, v, *, causal: bool, scale: float):
+    """Full-score attention (small S / correctness path)."""
+    s = _grouped_scores(q, k) * scale
+    S, T = s.shape[-2], s.shape[-1]
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return _grouped_out(p.astype(q.dtype), v).astype(q.dtype)
+
+
+def attention_xla_flash(q, k, v, *, causal: bool, scale: float,
+                        chunk: int):
+    """Blockwise-softmax attention in plain XLA (scan over KV chunks);
+    memory O(S·chunk) — used for the 32k-prefill cells."""
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    KV = k.shape[2]
+    dv = v.shape[-1]  # may differ from dh (MLA: qk 96, v 64)
+    G = H // KV
+    nc = T // chunk
+    qg = q.reshape(B, S, KV, G, dh)
+
+    def body(carry, ci):
+        # unrolled over static ci: causal skipping of fully-masked
+        # chunks is free, and XLA's cost model counts every chunk
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ci * chunk, chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ci * chunk, chunk, axis=1)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, ks,
+                        preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = jnp.arange(S)[:, None] + (T - S)
+            cols = ci * chunk + jnp.arange(chunk)[None, :]
+            sc = jnp.where(rows >= cols, sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        pexp = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(pexp, axis=-1)
+        upd = jnp.einsum("bkgst,btkd->bkgsd", pexp, vs,
+                         preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + upd
+        return (m_new, l_new, acc_new)
+
+    m0 = jnp.full((B, KV, G, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, dv), jnp.float32)
+    carry = (m0, l0, a0)
+    for ci in range(nc):
+        if causal and ci * chunk > (T - S) + S - 1:
+            continue  # chunk entirely above the causal diagonal
+        carry = body(carry, ci)
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, dv).astype(q.dtype)
+
+
+def run_attention(q, k, v, cfg: LMConfig, *, causal=True):
+    """q (B,S,H,dh), k/v (B,T,KV,dh) -> (B,S,H*dh)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if cfg.attn_impl.startswith("pallas") and q.shape[-1] != v.shape[-1]:
+        # the Pallas kernel assumes a single head dim; MLA (qk 96 /
+        # v 64) takes the XLA blockwise path instead
+        return run_attention(
+            q, k, v,
+            dataclasses.replace(cfg, attn_impl="xla_flash"),
+            causal=causal,
+        )
+    if cfg.attn_impl.startswith("pallas"):
+        out = mha_kernel(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal,
+            impl=cfg.attn_impl,
+        ).transpose(0, 2, 1, 3)
+    elif cfg.attn_impl == "xla_flash" and k.shape[1] >= cfg.attn_chunk:
+        out = attention_xla_flash(
+            q, k, v, causal=causal, scale=scale, chunk=cfg.attn_chunk
+        )
+    else:
+        out = attention_xla(q, k, v, causal=causal, scale=scale)
+    B, S = q.shape[0], q.shape[1]
+    return out.reshape(B, S, -1)
+
+
+def decode_attention(q, k_cache, v_cache, pos, scale):
+    """One-position attention against a (possibly sequence-sharded)
+    cache.  q (B,1,H,dh); k/v (B,T,KV,dh); mask positions >= pos+1.
+    Written as plain reductions so GSPMD turns the T-dim reductions
+    into partial-softmax collectives when T is sharded (SP decode)."""
+    s = _grouped_scores(q, k_cache) * scale  # (B,KV,G,1,T)
+    T = k_cache.shape[1]
+    valid = jnp.arange(T)[None, None, None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = _grouped_out((p / l).astype(q.dtype), v_cache).astype(q.dtype)
+    return out.reshape(q.shape[0], 1, -1)
+
+
+# ----------------------------------------------------------------- #
+# blocks
+
+
+def _mlp(lp, x, cfg: LMConfig):
+    if cfg.mlp_type == "swiglu":
+        h = swiglu(x @ lp["wg"], x @ lp["wu"])
+    else:
+        h = relu2(x @ lp["wg"])
+    return h @ lp["wd"]
+
+
+def _gqa_qkv(lp, x, cfg: LMConfig, positions):
+    B, S, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ lp["wq"]).reshape(B, S, H, dh)
+    k = (x @ lp["wk"]).reshape(B, S, KV, dh)
+    v = (x @ lp["wv"]).reshape(B, S, KV, dh)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _mla_q(lp, x, cfg: LMConfig, positions):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    qa = rms_norm(x @ lp["wq_a"], lp["q_norm"], cfg.norm_eps)
+    q = (qa @ lp["wq_b"]).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_angles(positions, rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_latent(lp, x, cfg: LMConfig, positions):
+    """Compressed KV: returns (c (B,S,kvr) post-norm, k_rope (B,S,rope))."""
+    kvr, rope = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = x @ lp["wkv_a"]
+    c = rms_norm(kv[..., :kvr], lp["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., kvr:]
+    cos, sin = rope_angles(positions, rope, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c, k_rope
+
+
+def _mla_attention_train(lp, x, cfg: LMConfig, positions):
+    """Materialized MLA attention (train / prefill path)."""
+    B, S, d = x.shape
+    H, nope, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(lp, x, cfg, positions)
+    c, k_rope = _mla_latent(lp, x, cfg, positions)
+    k_nope = (c @ lp["wk_b"]).reshape(B, S, H, nope)
+    v = (c @ lp["wv_b"]).reshape(B, S, H, vd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, cfg.qk_rope_dim))], axis=-1
+    )
+    out = run_attention(q, k, v, cfg, causal=True)
+    return out @ lp["wo"], (c, k_rope)
+
+
+def _mla_attention_decode(lp, x, cfg: LMConfig, c_cache, kr_cache, pos):
+    """Absorbed MLA decode: scores/context in latent space — the KV
+    cache stays (kvr + rope) per token, never expanded to H heads."""
+    B = x.shape[0]
+    H, nope, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(lp, x, cfg, positions)  # (B,1,H,·)
+    wk_b = lp["wk_b"].reshape(kvr, H, nope)
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk_b)  # (B,1,H,kvr)
+    s = (
+        jnp.einsum("bqhr,bkr->bhqk", q_abs, c_cache,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhp,bkp->bhqk", q_rope, kr_cache,
+                     preferred_element_type=jnp.float32)
+    ) / math.sqrt(nope + cfg.qk_rope_dim)
+    T = c_cache.shape[1]
+    valid = jnp.arange(T)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", p, c_cache.astype(jnp.float32))
+    wv_b = lp["wv_b"].reshape(kvr, H, vd)
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx.astype(x.dtype), wv_b)
+    return out.reshape(B, 1, H * vd) @ lp["wo"]
+
+
+# ----------------------------------------------------------------- #
+# forward passes
+
+
+def _layer_train(lp, x, cfg: LMConfig, topo: Topology, positions):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.attn_type == "gqa":
+        q, k, v = _gqa_qkv(lp, h, cfg, positions)
+        attn = run_attention(q, k, v, cfg, causal=True) @ lp["wo"]
+    else:
+        attn, _ = _mla_attention_train(lp, h, cfg, positions)
+    x = x + attn
+    if cfg.seq_shard_resid and topo.tp_size > 1:
+        x = constrain(x, topo, "dp", "tp", None)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        mlp_out, aux = moe_ffn(
+            h, lp["router"], lp["wg_e"], lp["wu_e"], lp["wd_e"],
+            cfg.moe, topo,
+        )
+    else:
+        mlp_out, aux = _mlp(lp, h, cfg), jnp.float32(0)
+    x = x + mlp_out
+    if cfg.seq_shard_resid and topo.tp_size > 1:
+        x = constrain(x, topo, "dp", "tp", None)
+    return x, aux
+
+
+def forward(params, tokens, cfg: LMConfig, topo: Topology):
+    """Token ids (B, S) -> final hidden states (B, S, d), aux loss."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, topo, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def layer(x, lp):
+        return _layer_train(lp, x, cfg, topo, positions)
+
+    if cfg.remat == "full":
+        layer = jax.checkpoint(layer)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(layer, x, params["layers"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.float32(0)
+        for li in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda v: v[li], params["layers"])
+            x, a = layer(x, lp)
+            aux = aux + a
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_head_weight(params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def lm_loss(params, batch, cfg: LMConfig, topo: Topology):
+    """Next-token CE with chunked vocab projection.  batch:
+    {'tokens': (B, S), 'labels': (B, S)} with labels < 0 masked."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    x, aux = forward(params, tokens, cfg, topo)
+    head = lm_head_weight(params, cfg)
+    chunk = min(cfg.loss_chunk or S, S)
+    n_chunks = S // chunk
+
+    def chunk_ce(ci):
+        xc = jax.lax.dynamic_slice_in_dim(x, ci * chunk, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, 1)
+        logits = (xc @ head).astype(jnp.float32)  # (B, c, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - ll) * mask), jnp.sum(mask)
+
+    # unrolled python loop (static trip count): keeps cost_analysis
+    # exact (lax.scan bodies are counted once by XLA's cost model)
+    tot, cnt = jnp.float32(0), jnp.float32(0)
+    for ci in range(n_chunks):
+        l, c = chunk_ce(ci)
+        tot, cnt = tot + l, cnt + c
+    loss = tot / jnp.maximum(cnt, 1.0)
+    if cfg.moe:
+        loss = loss + cfg.moe.aux_loss_weight * aux / cfg.n_layers
+    return loss
+
+
+# ----------------------------------------------------------------- #
+# serving: prefill + single-token decode with a static-size cache
+
+
+def cache_shapes(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    L = cfg.n_layers
+    dt = cfg.dtype
+    if cfg.attn_type == "mla":
+        return {
+            "c": jax.ShapeDtypeStruct(
+                (L, batch, max_len, cfg.kv_lora_rank), dt),
+            "kr": jax.ShapeDtypeStruct(
+                (L, batch, max_len, cfg.qk_rope_dim), dt),
+        }
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, KV, dh), dt),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, KV, dh), dt),
+    }
+
+
+def cache_specs(cfg: LMConfig, topo: Topology, *, long: bool) -> dict:
+    """Sequence-sharded KV cache.  decode_*: batch over dp, seq over
+    tp.  long_*: batch unshardable (B=1) — seq over every axis."""
+    s = topo.spec
+    if long:
+        seq = s(None, None, "all", None)
+        seq5 = s(None, None, "all", None, None)
+    else:
+        seq = s(None, "dp", "tp", None)
+        seq5 = s(None, "dp", "tp", None, None)
+    if cfg.attn_type == "mla":
+        return {"c": seq, "kr": seq}
+    return {"k": seq5, "v": seq5}
+
+
+def prefill_step(params, tokens, cfg: LMConfig, topo: Topology,
+                 max_len: int):
+    """Prompt (B, S) -> (cache dict, last-position logits (B, V))."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.attn_type == "gqa":
+            q, k, v = _gqa_qkv(lp, h, cfg, positions)
+            attn = run_attention(q, k, v, cfg, causal=True) @ lp["wo"]
+            kv = {"k": k, "v": v}
+        else:
+            attn, (c, kr) = _mla_attention_train(lp, h, cfg, positions)
+            kv = {"c": c, "kr": kr}
+        x = x + attn
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            mlp_out, _ = moe_ffn(
+                h, lp["router"], lp["wg_e"], lp["wu_e"], lp["wd_e"],
+                cfg.moe, topo,
+            )
+        else:
+            mlp_out = _mlp(lp, h, cfg)
+        return x + mlp_out, kv
+
+    if cfg.remat == "full":
+        layer = jax.checkpoint(layer)
+    if cfg.scan_layers:
+        x, kvs = jax.lax.scan(layer, x, params["layers"])
+    else:
+        outs = []
+        for li in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda v: v[li], params["layers"])
+            x, kv = layer(x, lp)
+            outs.append(kv)
+        kvs = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *outs
+        )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ lm_head_weight(params, cfg)).astype(jnp.float32)
+
+    # place prefix into the static-size cache
+    cache = {}
+    for name, arr in kvs.items():
+        pad = [(0, 0)] * arr.ndim
+        pad[2] = (0, max_len - S)
+        cache[name] = jnp.pad(arr, pad)
+    return cache, logits
+
+
+def decode_step(params, cache, tokens, pos, cfg: LMConfig,
+                topo: Topology):
+    """One decode step: tokens (B,) against cache at position ``pos``.
+    Returns (logits (B, V), updated cache)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # (B,1,d)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    scale_dh = cfg.head_dim
+
+    def layer(x, layer_in):
+        lp, cache_l = layer_in
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.attn_type == "gqa":
+            q, k, v = _gqa_qkv(lp, h, cfg, positions)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache_l["k"], k, pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache_l["v"], v, pos, axis=1)
+            attn = decode_attention(
+                q, k_cache, v_cache, pos, 1.0 / math.sqrt(scale_dh)
+            ) @ lp["wo"]
+            new_cache = {"k": k_cache, "v": v_cache}
+        else:
+            c, kr = _mla_latent(lp, h, cfg, positions)
+            c_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache_l["c"], c, pos, axis=1)
+            kr_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache_l["kr"], kr, pos, axis=1)
+            attn = _mla_attention_decode(
+                lp, h, cfg, c_cache, kr_cache, pos)
+            new_cache = {"c": c_cache, "kr": kr_cache}
+        x = x + attn
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            mlp_out, _ = moe_ffn(
+                h, lp["router"], lp["wg_e"], lp["wu_e"], lp["wd_e"],
+                cfg.moe, topo,
+            )
+        else:
+            mlp_out = _mlp(lp, h, cfg)
+        return x + mlp_out, new_cache
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(layer, x, (params["layers"], cache))
+    else:
+        outs = []
+        for li in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda v: v[li], params["layers"])
+            cl = jax.tree_util.tree_map(lambda v: v[li], cache)
+            x, nc = layer(x, (lp, cl))
+            outs.append(nc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *outs
+        )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ lm_head_weight(params, cfg)).astype(jnp.float32)
+    return logits, new_cache

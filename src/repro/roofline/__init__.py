@@ -1,0 +1,9 @@
+from repro.roofline.hlo import collective_bytes, flops_and_bytes
+from repro.roofline.model import (
+    Roofline, from_record, PEAK_FLOPS, HBM_BW, LINK_BW,
+)
+
+__all__ = [
+    "collective_bytes", "flops_and_bytes", "Roofline", "from_record",
+    "PEAK_FLOPS", "HBM_BW", "LINK_BW",
+]

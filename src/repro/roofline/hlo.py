@@ -1,0 +1,182 @@
+"""HLO-text analysis: collective-traffic extraction.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+compiled (post-SPMD-partitioning, per-device) HLO module text: first a
+pass over instruction definitions builds name → result-shape-bytes,
+then every collective op's operand names are resolved through that
+map and summed.  (Operand shapes are not inlined in modern HLO dumps,
+hence the two passes.)
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+    "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "token": 0, "u1": 1, "s1": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# definition: `  %name = SHAPE opcode(args...`  (SHAPE may be a tuple)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\((.*)$"
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(shape_expr: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_expr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns per-device collective operand traffic:
+    {'bytes': {op: B}, 'counts': {op: n}, 'total_bytes': B}."""
+    sizes: dict[str, int] = {}
+    pending: list[tuple[str, str, str]] = []  # (opcode, args, name)
+
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_expr, opcode, rest = m.groups()
+        sizes[name] = _shape_bytes(shape_expr)
+        base = opcode.replace("-start", "")
+        if base in COLLECTIVE_OPS and not opcode.endswith("-done"):
+            # operand list = text up to the matching close paren
+            depth, end = 1, len(rest)
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            pending.append((base, rest[:end], name))
+
+    out: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for base, args, name in pending:
+        b = 0
+        for om in _OPERAND_RE.finditer(args):
+            b += sizes.get(om.group(1), 0)
+        if b == 0:
+            # operand resolution failed; fall back to result size
+            b = sizes.get(name, 0)
+        out[base] += b
+        counts[base] += 1
+    return {
+        "bytes": dict(out),
+        "counts": dict(counts),
+        "total_bytes": int(sum(out.values())),
+    }
+
+
+def flops_and_bytes(cost: dict) -> tuple[float, float]:
+    """Extract (flops, bytes accessed) from compiled.cost_analysis()."""
+    if cost is None:
+        return 0.0, 0.0
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return flops, byts
+
+
+# ------------------------------------------------------------------ #
+# refined HBM-traffic model
+#
+# cost_analysis()'s "bytes accessed" on the CPU backend counts every
+# instruction of every computation — including the *internals* of
+# fused computations (whose parameters/slices/bitcasts never touch
+# HBM).  This analyzer walks the HLO text computation-by-computation,
+# skips computations that are only ever called by `fusion` ops, skips
+# free ops, and charges each remaining instruction output-bytes plus
+# operand-bytes — a standard post-fusion HBM traffic model.
+
+_FREE_OPS = {
+    "parameter", "bitcast", "tuple", "get-tuple-element", "constant",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+
+
+def hbm_traffic(hlo_text: str) -> dict:
+    """Estimate executed HBM bytes: sum over non-free instructions in
+    non-fused computations of (output + operand) bytes.  While bodies
+    count once (callers scale by trip count externally)."""
+    # pass 1: find computations referenced by fusion ops (+ reducers)
+    fused: set = set()
+    reducers: set = set()
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        _, _, opcode, rest = m.groups()
+        for cm in _CALLS_RE.finditer(rest):
+            if opcode == "fusion":
+                fused.add(cm.group(1))
+            elif opcode in ("reduce", "all-reduce", "reduce-scatter",
+                            "scatter", "reduce-window", "sort",
+                            "all-reduce-start"):
+                reducers.add(cm.group(1))
+
+    sizes: dict[str, int] = {}
+    cur_comp = None
+    skip = False
+    total = 0
+    per_op: dict = defaultdict(int)
+    for ln in lines:
+        cm = _COMP_RE.match(ln)
+        if cm:
+            cur_comp = cm.group(1)
+            skip = cur_comp in fused or cur_comp in reducers
+            continue
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, shape_expr, opcode, rest = m.groups()
+        out_b = _shape_bytes(shape_expr)
+        sizes[name] = out_b
+        if skip or opcode in _FREE_OPS:
+            continue
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_b = sum(
+            sizes.get(om.group(1), 0)
+            for om in _OPERAND_RE.finditer(rest[:end])
+        )
+        total += out_b + operand_b
+        per_op[opcode] += out_b + operand_b
+    top = dict(sorted(per_op.items(), key=lambda kv: -kv[1])[:8])
+    return {"total_bytes": int(total), "by_op": top}

@@ -1,0 +1,119 @@
+"""Three-term roofline model for TPU v5e (the TARGET hardware).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+    memory term     = HLO_bytes / HBM_bw                 (per chip)
+    collective term = collective_bytes / link_bw         (per chip)
+
+HLO_FLOPs / HLO_bytes come from the compiled (per-device, SPMD)
+module's cost analysis; collective bytes from the HLO-text parser.
+The dominant term is the bottleneck; MODEL_FLOPS/HLO_FLOPs measures
+how much of the compiled compute is 'useful'.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / ICI link (~per-chip effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    cell: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per chip
+    hlo_bytes: float          # per chip
+    coll_bytes: float         # per chip
+    model_flops: float        # useful FLOPs for the whole step (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline-limited step time (no overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (chips · HLO_FLOPs): remat/redundancy waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful FLOPs over what the chips could do in the bound time
+        (the §Perf score: MFU against the dominant bottleneck)."""
+        if self.t_bound <= 0:
+            return 0.0
+        return self.model_flops / (
+            self.chips * PEAK_FLOPS * self.t_bound
+        )
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "cell": self.cell, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_record(rec: dict) -> Roofline:
+    flops = rec["cost"].get("flops", 0.0)
+    # prefer the refined HBM-traffic model (fusion-aware HLO walk)
+    # over the raw backend "bytes accessed" when available
+    if rec.get("traffic"):
+        byts = rec["traffic"]["total_bytes"]
+        bkey = "traffic_bytes"
+    else:
+        byts = rec["cost"].get("bytes accessed", 0.0)
+        bkey = "bytes"
+    coll = rec["collectives"]["total_bytes"]
+    probes = rec.get("probes")
+    if probes:
+        # layer-scan correction: XLA counts the scan body once, so
+        # reconstruct totals from the depth-1/depth-2 probes.
+        L = probes["n_layers"]
+        p1, p2 = probes["L1"], probes["L2"]
+        if bkey not in p1:
+            bkey = "bytes"
+        flops = p1["flops"] + (L - 1) * (p2["flops"] - p1["flops"])
+        byts = p1[bkey] + (L - 1) * (p2[bkey] - p1[bkey])
+        coll = p1["collective_bytes"] + (L - 1) * (
+            p2["collective_bytes"] - p1["collective_bytes"]
+        )
+    return Roofline(
+        arch=rec["arch"], cell=rec["cell"], mesh=rec["mesh"],
+        chips=rec["chips"],
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        coll_bytes=coll,
+        model_flops=rec["model_flops"],
+    )

@@ -1,0 +1,20 @@
+"""Training substrate: optimizer, schedules, grad compression,
+checkpointing, generic distributed train step."""
+
+from repro.train.optimizer import (
+    AdamWConfig, init_state, apply_updates, global_norm,
+    clip_by_global_norm, state_specs,
+)
+from repro.train.schedule import warmup_cosine, constant
+from repro.train.train_step import (
+    TrainConfig, build_train_step, init_train_state,
+)
+from repro.train.checkpoint import Checkpointer
+from repro.train import compression
+
+__all__ = [
+    "AdamWConfig", "init_state", "apply_updates", "global_norm",
+    "clip_by_global_norm", "state_specs", "warmup_cosine", "constant",
+    "TrainConfig", "build_train_step", "init_train_state",
+    "Checkpointer", "compression",
+]

@@ -1,0 +1,118 @@
+"""AdamW from scratch (pytree-native), with fp32 master weights for
+low-precision params and global-norm clipping.
+
+State layout mirrors the param tree, so the same PartitionSpecs shard
+the optimizer state (ZeRO-style: FSDP-sharded params ⇒ FSDP-sharded
+m/v/master — no replication of optimizer memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                  # peak LR (schedule scales it)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_fp32: bool = True
+
+
+def init_state(params, cfg: AdamWConfig) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree_util.tree_map(zeros32, params),
+        "v": jax.tree_util.tree_map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(tree)
+        )
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return (
+        jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+            grads,
+        ),
+        norm,
+    )
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr_scale: jax.Array):
+    """One AdamW step.  Returns (params, state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    masters = state.get("master", params)
+
+    def upd(p_master, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        p32 = p_master.astype(jnp.float32)
+        p32 = p32 - lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+        )
+        return p32, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(masters)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+
+    ref_dtypes = jax.tree_util.tree_map(lambda p: p.dtype, params)
+    new_params = jax.tree_util.tree_map(
+        lambda p32, dt: p32.astype(dt), new_master, ref_dtypes
+    )
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.master_fp32:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_specs(param_specs, cfg: AdamWConfig):
+    """PartitionSpecs for the optimizer state given param specs."""
+    from jax.sharding import PartitionSpec as P
+
+    specs = {
+        "m": param_specs,
+        "v": param_specs,
+        "step": P(),
+    }
+    if cfg.master_fp32:
+        specs["master"] = param_specs
+    return specs

@@ -1,0 +1,24 @@
+"""LR schedules (warmup + cosine decay), as pure functions of step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Returns a multiplier in (0, 1] for the peak LR."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, warmup_steps))
+    prog = jnp.clip(
+        (step - warmup_steps) / max(1, total_steps - warmup_steps),
+        0.0, 1.0,
+    )
+    cos = final_frac + (1 - final_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return warm * cos
+
+
+def constant(step):
+    return jnp.ones_like(step, jnp.float32)

@@ -1,0 +1,112 @@
+"""Generic distributed train step: microbatch gradient accumulation,
+optional int8+error-feedback accumulator compression, global-norm
+clip, AdamW, LR schedule.
+
+`build_train_step(loss_fn, adamw_cfg, ...)` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for jax.jit with in/out shardings.  ``loss_fn(params, batch)``
+must be a pure scalar loss (the model closures carry their configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import compression
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+from repro.train.schedule import warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    microbatches: int = 1          # grad-accumulation chunks per step
+    compress_accum: bool = False   # int8+EF gradient accumulator
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def _split_batch(batch, n: int):
+    """Reshape each leaf (B, ...) -> (n, B/n, ...)."""
+    def r(x):
+        assert x.shape[0] % n == 0, (x.shape, n)
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+    return jax.tree_util.tree_map(r, batch)
+
+
+def build_train_step(
+    loss_fn: Callable,
+    cfg: TrainConfig,
+):
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch, step):
+        if cfg.microbatches > 1:
+            micro = _split_batch(batch, cfg.microbatches)
+
+            def accum(carry, mb):
+                gacc, lacc, err = carry
+                loss, grads = grad_fn(params, mb)
+                if cfg.compress_accum:
+                    # int8 error-feedback accumulation
+                    summed = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(jnp.float32),
+                        compression.dequantize_tree(gacc), grads,
+                    )
+                    comp, err = compression.ef_compress_tree(summed, err)
+                    return (comp, lacc + loss, err), None
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads
+                )
+                return (gacc, lacc + loss, err), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            if cfg.compress_accum:
+                g0 = {
+                    "q": jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.int8), params
+                    ),
+                    "scale": jax.tree_util.tree_map(
+                        lambda p: jnp.zeros((), jnp.float32), params
+                    ),
+                }
+                err0 = compression.init_error_tree(params)
+            else:
+                g0, err0 = zeros, zeros
+            (gfin, ltot, _), _ = jax.lax.scan(
+                accum, (g0, jnp.float32(0), err0), micro
+            )
+            grads = (
+                compression.dequantize_tree(gfin)
+                if cfg.compress_accum else gfin
+            )
+            grads = jax.tree_util.tree_map(
+                lambda g: g / cfg.microbatches, grads
+            )
+            loss = ltot / cfg.microbatches
+        else:
+            loss, grads = grad_fn(params, batch)
+
+        lr_scale = warmup_cosine(
+            step, warmup_steps=cfg.warmup_steps,
+            total_steps=cfg.total_steps,
+        )
+        params, opt_state, om = apply_updates(
+            params, grads, opt_state, cfg.adamw, lr_scale
+        )
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(params, cfg: TrainConfig):
+    return init_state(params, cfg.adamw)

@@ -1,0 +1,31 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — unit and
+smoke tests must see the real (single) device; multi-device tests run
+in subprocesses that set their own flags."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_graphs():
+    from repro.graph import rmat1, rmat2, grid_road_graph, small_world_graph
+
+    return [
+        rmat1(8, seed=3),
+        rmat2(8, seed=5),
+        grid_road_graph(12, seed=1),
+        small_world_graph(300, seed=2),
+    ]
+
+
+@pytest.fixture(scope="session")
+def topo1():
+    from repro.models.common import single_device_topology
+
+    return single_device_topology()

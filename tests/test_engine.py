@@ -1,0 +1,177 @@
+"""Distributed EAGM engine (single-device mesh; the multi-device
+semantics run in tests/test_distributed_subprocess.py)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    BFS, CC, SSWP, EngineConfig, cc_sources, dijkstra_reference,
+    make_policy, run_distributed, sssp_sources,
+)
+from repro.graph import partition_1d
+
+
+def close(a, b):
+    return np.allclose(
+        np.where(np.isinf(a), -1, a), np.where(np.isinf(b), -1, b)
+    )
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+VARIANTS = [
+    ("chaotic", "buffer"), ("chaotic", "threadq"), ("chaotic", "numaq"),
+    ("delta:5", "buffer"), ("delta:5", "threadq"), ("delta:20", "numaq"),
+    ("kla:1", "buffer"), ("kla:2", "threadq"), ("kla:2", "numaq"),
+    ("dijkstra", "buffer"),
+]
+
+
+@pytest.mark.parametrize("root,variant", VARIANTS)
+def test_sssp_variants_match_oracle(tiny_graphs, mesh1, root, variant):
+    g = tiny_graphs[0]
+    ref = dijkstra_reference(g, 0)
+    pg = partition_1d(g, 1)
+    cfg = EngineConfig(policy=make_policy(root, variant, chunk_size=64))
+    d, m = run_distributed(pg, mesh1, cfg, sssp_sources(0))
+    assert close(ref, d), f"{root}+{variant}"
+    assert m.supersteps > 0 and m.commits > 0
+
+
+@pytest.mark.parametrize("exchange", ["a2a", "pmin"])
+def test_exchange_paths_agree(tiny_graphs, mesh1, exchange):
+    g = tiny_graphs[1]
+    ref = dijkstra_reference(g, 0)
+    pg = partition_1d(g, 1)
+    cfg = EngineConfig(
+        policy=make_policy("delta:5", "buffer"), exchange=exchange
+    )
+    d, _ = run_distributed(pg, mesh1, cfg, sssp_sources(0))
+    assert close(ref, d)
+
+
+def test_stale_workitems_are_harmless(tiny_graphs, mesh1):
+    """Monotonicity (paper §II): duplicate/overestimated workitems in
+    the initial set cost work but cannot corrupt the fixpoint."""
+    g = tiny_graphs[0]
+    ref = dijkstra_reference(g, 0)
+    pg = partition_1d(g, 1)
+    rng = np.random.default_rng(1)
+    extras = [
+        (int(v), float(ref[v] + rng.uniform(0.5, 50)), 0)
+        for v in rng.integers(0, g.n, 10)
+        if np.isfinite(ref[v])
+    ]
+    cfg = EngineConfig(policy=make_policy("delta:5", "buffer"))
+    d, _ = run_distributed(
+        pg, mesh1, cfg, sssp_sources(0) + extras
+    )
+    assert close(ref, d)
+
+
+def test_bfs(tiny_graphs, mesh1):
+    g = tiny_graphs[3]
+    # BFS oracle: Dijkstra on unit weights
+    from repro.graph.formats import Graph
+
+    g1 = Graph(g.n, g.src, g.dst, np.ones(g.m, np.float32))
+    ref = dijkstra_reference(g1, 0)
+    pg = partition_1d(g, 1)
+    cfg = EngineConfig(
+        policy=make_policy("delta:1", "buffer"), processing=BFS
+    )
+    d, _ = run_distributed(pg, mesh1, cfg, sssp_sources(0))
+    assert close(ref, d)
+
+
+def test_connected_components(mesh1):
+    """CC by min-label propagation vs union-find."""
+    rng = np.random.default_rng(4)
+    n, m = 120, 140
+    from repro.graph.formats import Graph
+
+    g = Graph(
+        n, rng.integers(0, n, m), rng.integers(0, n, m),
+        np.ones(m, np.float32),
+    ).symmetrized().deduplicated()
+
+    parent = list(range(n))
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for u, v in zip(g.src, g.dst):
+        ra, rb = find(int(u)), find(int(v))
+        if ra != rb:
+            parent[ra] = rb
+    # canonical label = min vertex id in component
+    comp_min = {}
+    for v in range(n):
+        r = find(v)
+        comp_min[r] = min(comp_min.get(r, v), v)
+    ref = np.array([comp_min[find(v)] for v in range(n)], np.float64)
+
+    pg = partition_1d(g, 1)
+    cfg = EngineConfig(
+        policy=make_policy("chaotic", "buffer"), processing=CC
+    )
+    labels, _ = run_distributed(pg, mesh1, cfg, cc_sources(n))
+    assert np.array_equal(labels.astype(np.int64), ref.astype(np.int64))
+
+
+def test_widest_path(tiny_graphs, mesh1):
+    """SSWP vs max-min Dijkstra oracle."""
+    import heapq
+
+    from repro.graph.formats import coo_to_csr
+
+    g = tiny_graphs[0]
+    csr = coo_to_csr(g)
+    width = np.full(g.n, -np.inf)
+    width[0] = np.inf
+    heap = [(-np.inf, 0)]  # max-heap by negated width
+    visited = np.zeros(g.n, bool)
+    heap = [(-np.float64(np.inf), 0)]
+    while heap:
+        nw, v = heapq.heappop(heap)
+        w = -nw
+        if visited[v]:
+            continue
+        visited[v] = True
+        nbrs, ws = csr.neighbors(v)
+        for u, ew in zip(nbrs, ws):
+            cand = min(w, float(ew))
+            if cand > width[u]:
+                width[u] = cand
+                heapq.heappush(heap, (-cand, int(u)))
+
+    pg = partition_1d(g, 1)
+    cfg = EngineConfig(
+        policy=make_policy("chaotic", "buffer"), processing=SSWP
+    )
+    d, _ = run_distributed(pg, mesh1, cfg, [(0, float("inf"), 0)])
+    assert close(width, d)
+
+
+def test_metrics_tradeoff(tiny_graphs, mesh1):
+    """The paper's central tradeoff on the engine: stronger ordering
+    => fewer relaxations, more supersteps."""
+    g = tiny_graphs[0]
+    pg = partition_1d(g, 1)
+    res = {}
+    for root, var in [("chaotic", "buffer"), ("delta:20", "buffer"),
+                      ("dijkstra", "buffer")]:
+        cfg = EngineConfig(policy=make_policy(root, var))
+        _, m = run_distributed(pg, mesh1, cfg, sssp_sources(0))
+        res[root] = m
+    assert res["dijkstra"].relaxations <= res["delta:20"].relaxations
+    assert res["delta:20"].relaxations <= res["chaotic"].relaxations
+    assert res["dijkstra"].supersteps >= res["delta:20"].supersteps
+    assert res["delta:20"].supersteps >= res["chaotic"].supersteps

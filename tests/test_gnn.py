@@ -1,0 +1,160 @@
+"""GNN models: invariance/equivariance properties, permutation
+consistency, triplet builder correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import dimenet, egnn, gin, mace
+from repro.models.gnn.batch import build_triplets, random_molecule_batch
+from repro.models.gnn.geometry import real_gaunt_table, real_sph_harm_l2
+
+
+@pytest.fixture(scope="module")
+def mol():
+    mb = random_molecule_batch(2, 10, 20, with_triplets=True,
+                               triplet_pad=128, seed=3)
+    return {k: jnp.asarray(v) for k, v in mb.__dict__.items()
+            if v is not None}
+
+
+def rot(theta=0.63, axis="z"):
+    c, s = np.cos(theta), np.sin(theta)
+    R = np.array([[c, -s, 0], [s, c, 0], [0, 0, 1]], np.float32)
+    return jnp.asarray(R)
+
+
+def test_gaunt_table_symmetry():
+    G = real_gaunt_table()
+    # fully symmetric in its three slots
+    np.testing.assert_allclose(G, np.transpose(G, (1, 0, 2)), atol=1e-6)
+    np.testing.assert_allclose(G, np.transpose(G, (0, 2, 1)), atol=1e-6)
+    # G[0,a,b] = delta_ab / (2 sqrt(pi)) (Y00 is constant)
+    expected = np.eye(9) * 0.5 / np.sqrt(np.pi)
+    np.testing.assert_allclose(G[0], expected, atol=1e-6)
+
+
+def test_sph_harm_orthonormal():
+    """Quadrature check: <Y_a, Y_b> = delta_ab."""
+    xs, ws = np.polynomial.legendre.leggauss(16)
+    theta = np.arccos(xs)
+    phi = np.linspace(0, 2 * np.pi, 32, endpoint=False)
+    th, ph = np.meshgrid(theta, phi, indexing="ij")
+    st = np.sin(th)
+    xyz = np.stack(
+        [st * np.cos(ph), st * np.sin(ph), np.cos(th)], -1
+    ).astype(np.float32)
+    Y = np.asarray(real_sph_harm_l2(jnp.asarray(xyz)))
+    w = ws[:, None] * (2 * np.pi / 32)
+    gram = np.einsum("tpa,tpb,tp->ab", Y, Y, np.broadcast_to(w, th.shape))
+    np.testing.assert_allclose(gram, np.eye(9), atol=1e-5)
+
+
+@pytest.mark.parametrize("model,make_cfg", [
+    (egnn, lambda: egnn.EGNNConfig(n_layers=2, d_hidden=24, d_in=10)),
+    (mace, lambda: mace.MACEConfig(n_layers=2, d_hidden=12, d_in=10)),
+])
+def test_e3_invariant_energy(model, make_cfg, mol, key):
+    cfg = make_cfg()
+    p = model.init_params(key, cfg)
+    args = (mol["x"][0], mol["coords"][0], mol["edge_src"][0],
+            mol["edge_dst"][0], mol["edge_mask"][0], cfg)
+    e1 = model.energy(p, *args[:5], cfg)
+    coords2 = mol["coords"][0] @ rot().T + jnp.asarray([3., -1., 0.5])
+    e2 = model.energy(p, mol["x"][0], coords2, mol["edge_src"][0],
+                      mol["edge_dst"][0], mol["edge_mask"][0], cfg)
+    assert abs(float(e1 - e2)) < 1e-3 * max(1.0, abs(float(e1)))
+
+
+def test_dimenet_e3_invariance(mol, key):
+    cfg = dimenet.DimeNetConfig(n_blocks=2, d_hidden=16, d_in=10,
+                                n_bilinear=4)
+    p = dimenet.init_params(key, cfg)
+    a = (mol["x"][0], mol["coords"][0], mol["edge_src"][0],
+         mol["edge_dst"][0], mol["edge_mask"][0], mol["tri_kj"][0],
+         mol["tri_ji"][0], mol["tri_mask"][0])
+    e1 = dimenet.energy(p, *a, cfg)
+    coords2 = mol["coords"][0] @ rot(1.2).T - jnp.asarray([1., 2., 3.])
+    e2 = dimenet.energy(p, mol["x"][0], coords2, *a[2:], cfg)
+    assert abs(float(e1 - e2)) < 1e-3 * max(1.0, abs(float(e1)))
+
+
+def test_egnn_coordinate_equivariance(mol, key):
+    """x' must rotate with the input frame (E(n) equivariance)."""
+    cfg = egnn.EGNNConfig(n_layers=2, d_hidden=24, d_in=10)
+    p = egnn.init_params(key, cfg)
+    R = rot(0.9)
+    t = jnp.asarray([0.3, -0.7, 2.0])
+    h1, c1 = egnn.forward(p, mol["x"][0], mol["coords"][0],
+                          mol["edge_src"][0], mol["edge_dst"][0],
+                          mol["edge_mask"][0], cfg)
+    h2, c2 = egnn.forward(p, mol["x"][0], mol["coords"][0] @ R.T + t,
+                          mol["edge_src"][0], mol["edge_dst"][0],
+                          mol["edge_mask"][0], cfg)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(c1 @ R.T + t), np.asarray(c2), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_gin_permutation_equivariance(key):
+    """Relabeling nodes permutes GIN outputs identically."""
+    from repro.graph import small_world_graph
+
+    g = small_world_graph(60, seed=7)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(g.n, 16)), jnp.float32)
+    cfg = gin.GINConfig(n_layers=2, d_hidden=24, d_in=16, n_classes=4)
+    p = gin.init_params(key, cfg)
+    em = jnp.ones(g.m, bool)
+    out1 = gin.forward(p, x, jnp.asarray(g.src), jnp.asarray(g.dst),
+                       em, cfg)
+    perm = rng.permutation(g.n)
+    inv = np.argsort(perm)
+    out2 = gin.forward(
+        p, x[perm], jnp.asarray(inv[g.src]), jnp.asarray(inv[g.dst]),
+        em, cfg,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out1[perm]), np.asarray(out2), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_triplet_builder_exact():
+    # path graph 0->1->2 plus 3->1: triplets for edge (1->2) are
+    # incoming edges of 1 excluding backtrack from 2
+    src = np.array([0, 1, 3, 2], np.int32)
+    dst = np.array([1, 2, 1, 1], np.int32)
+    kj, ji = build_triplets(src, dst, 4)
+    pairs = set(zip(kj.tolist(), ji.tolist()))
+    # edge ids: e0=(0->1), e1=(1->2), e2=(3->1), e3=(2->1)
+    # triplets for e1=(1->2): k->1 with k != 2 -> {e0, e2}
+    assert (0, 1) in pairs and (2, 1) in pairs
+    assert (3, 1) not in pairs  # backtrack 2->1->2 excluded
+    # triplets for e0=(0->1): incoming of 0: none
+    assert not any(j == 0 for _, j in pairs)
+
+
+def test_losses_finite_and_trainable(mol, key):
+    batch = {
+        "x": mol["x"], "coords": mol["coords"],
+        "edge_src": mol["edge_src"], "edge_dst": mol["edge_dst"],
+        "edge_mask": mol["edge_mask"], "y": mol["y"],
+        "tri_kj": mol["tri_kj"], "tri_ji": mol["tri_ji"],
+        "tri_mask": mol["tri_mask"],
+    }
+    for model, cfg in [
+        (egnn, egnn.EGNNConfig(n_layers=2, d_hidden=24, d_in=10)),
+        (mace, mace.MACEConfig(n_layers=2, d_hidden=12, d_in=10)),
+        (dimenet, dimenet.DimeNetConfig(n_blocks=2, d_hidden=16,
+                                        d_in=10, n_bilinear=4)),
+    ]:
+        p = model.init_params(key, cfg)
+        loss, g = jax.value_and_grad(model.regression_loss)(p, batch, cfg)
+        assert np.isfinite(float(loss))
+        assert all(
+            bool(jnp.all(jnp.isfinite(x)))
+            for x in jax.tree_util.tree_leaves(g)
+        )

@@ -1,0 +1,109 @@
+"""Graph substrate: formats, generators, partitioner, sampler."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (
+    Graph, coo_to_csr, csr_to_ell, partition_1d, rmat1,
+)
+from repro.graph.partition import chunk_fat_rows, default_ell_width
+from repro.graph.sampler import FanoutSampler
+
+
+def edge_set(g: Graph):
+    return set(zip(g.src.tolist(), g.dst.tolist(), g.weight.tolist()))
+
+
+def test_csr_roundtrip(tiny_graphs):
+    for g in tiny_graphs:
+        csr = coo_to_csr(g)
+        assert csr.m == g.m
+        out = set()
+        for v in range(g.n):
+            nbrs, ws = csr.neighbors(v)
+            out.update(
+                (v, int(u), float(w)) for u, w in zip(nbrs, ws)
+            )
+        assert out == edge_set(g)
+
+
+def test_ell_padding(tiny_graphs):
+    g = tiny_graphs[0]
+    csr = coo_to_csr(g)
+    ell = csr_to_ell(csr)
+    real = int(np.sum(ell.col != ell.pad_col))
+    assert real == g.m
+    assert np.all(np.isinf(ell.weight[ell.col == ell.pad_col]))
+
+
+@given(
+    n=st.integers(8, 60),
+    m=st.integers(1, 300),
+    parts=st.sampled_from([1, 2, 4, 8]),
+    width=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 5),
+)
+@settings(max_examples=25, deadline=None)
+def test_partition_roundtrip_property(n, m, parts, width, seed):
+    rng = np.random.default_rng(seed)
+    g = Graph(
+        n,
+        rng.integers(0, n, m),
+        rng.integers(0, n, m),
+        rng.uniform(1, 9, m).astype(np.float32),
+    ).deduplicated()
+    pg = partition_1d(g, parts, width=width)
+    got = set()
+    for p in range(pg.n_parts):
+        for r in range(pg.rows_per_rank):
+            src_local = pg.row_src[p, r]
+            if src_local == pg.n_local:
+                continue
+            gsrc = p * pg.n_local + src_local
+            for s in range(pg.width):
+                d = pg.col[p, r, s]
+                if d != pg.n_pad:
+                    got.add((int(gsrc), int(d), float(pg.wgt[p, r, s])))
+    assert got == edge_set(g)
+
+
+def test_fat_row_chunking_bounds():
+    g = rmat1(9, seed=1)
+    csr = coo_to_csr(g)
+    w = 8
+    row_src, col, wgt = chunk_fat_rows(csr, w, pad_col=g.n)
+    # every virtual row has <= w real entries, and the union is exact
+    assert col.shape[1] == w
+    per_row_real = np.sum(col != g.n, axis=1)
+    assert per_row_real.max() <= w
+    assert per_row_real.sum() == g.m
+
+
+def test_default_width_bounds():
+    assert 4 <= default_ell_width(0.5) <= 128
+    assert default_ell_width(1000) == 128
+
+
+def test_sampler_block_invariants(tiny_graphs):
+    g = tiny_graphs[3]
+    s = FanoutSampler(g, [4, 3], seed=0)
+    seeds = np.arange(32, dtype=np.int32)
+    blk = s.sample(seeds)
+    assert blk.n_seeds == 32
+    assert np.array_equal(blk.nodes[:32], seeds)
+    # edges reference valid block-local nodes
+    assert blk.edge_dst[: blk.n_edges].max() < blk.n_nodes
+    assert blk.edge_src[: blk.n_edges].max() < blk.n_nodes
+    # every sampled edge exists in the graph
+    es = edge_set(g)
+    pairs = {(int(a), int(b)) for a, b, _ in es}
+    for i in range(blk.n_edges):
+        u = int(blk.nodes[blk.edge_src[i]])
+        v = int(blk.nodes[blk.edge_dst[i]])
+        assert (u, v) in pairs
+    # padded sizes are static upper bounds
+    npad, epad = s.padded_sizes(32)
+    assert blk.nodes.shape[0] == npad
+    assert blk.edge_src.shape[0] == epad
+    assert blk.n_nodes <= npad and blk.n_edges <= epad

@@ -1,0 +1,158 @@
+"""LM family: losses, gradients, decode-vs-forward consistency,
+attention backends, parameter accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import single_device_topology
+from repro.models.lm import (
+    LMConfig, decode_step, forward, init_params, lm_head_weight,
+    lm_loss, param_specs, prefill_step,
+)
+from repro.models.moe import MoEConfig
+
+
+def tiny_gqa(**kw):
+    base = dict(
+        name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=97, param_dtype="float32", loss_chunk=8,
+    )
+    base.update(kw)
+    return LMConfig(**base)
+
+
+CONFIGS = {
+    "gqa": tiny_gqa(),
+    "mha": tiny_gqa(n_kv_heads=4),
+    "relu2": tiny_gqa(mlp_type="relu2"),
+    "mla": tiny_gqa(
+        attn_type="mla", q_lora_rank=48, kv_lora_rank=32,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+        tie_embeddings=True,
+    ),
+    "moe": tiny_gqa(
+        moe=MoEConfig(n_experts=4, top_k=2, d_model=64, d_ff=96,
+                      capacity_factor=2.0, min_capacity=64),
+    ),
+    "unrolled": tiny_gqa(scan_layers=False),
+}
+
+
+@pytest.fixture(scope="module")
+def toks(key):
+    return jax.random.randint(key, (2, 17), 0, 97)
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_loss_and_grads(name, key, toks, topo1):
+    cfg = CONFIGS[name]
+    p = init_params(key, cfg)
+    batch = {"tokens": toks[:, :16], "labels": toks[:, 1:]}
+    loss = lm_loss(p, batch, cfg, topo1)
+    assert np.isfinite(float(loss))
+    assert 3.0 < float(loss) < 7.0  # ~ln(97)=4.57 at init
+    g = jax.grad(lambda pp: lm_loss(pp, batch, cfg, topo1))(p)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in leaves)
+    assert sum(float(jnp.sum(x * x)) for x in leaves) > 0
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_decode_matches_forward(name, key, toks, topo1):
+    cfg = CONFIGS[name]
+    p = init_params(key, cfg)
+    cache, logits_prefill = prefill_step(p, toks[:, :16], cfg, topo1, 32)
+    lg, _ = decode_step(p, cache, toks[:, 16], 16, cfg, topo1)
+    x, _ = forward(p, toks, cfg, topo1)
+    ref16 = (x[:, 16] @ lm_head_weight(p, cfg)).astype(jnp.float32)
+    ref15 = (x[:, 15] @ lm_head_weight(p, cfg)).astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(ref16), rtol=1e-3, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_prefill), np.asarray(ref15),
+        rtol=1e-3, atol=2e-4,
+    )
+
+
+def test_scan_vs_unrolled_identical(key, toks, topo1):
+    cfg = CONFIGS["gqa"]
+    p = init_params(key, cfg)
+    x1, _ = forward(p, toks, cfg, topo1)
+    x2, _ = forward(
+        p, toks, dataclasses.replace(cfg, scan_layers=False), topo1
+    )
+    np.testing.assert_allclose(
+        np.asarray(x1), np.asarray(x2), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_xla_flash_matches_xla(key, toks, topo1):
+    cfg = dataclasses.replace(
+        CONFIGS["gqa"], attn_impl="xla_flash", attn_chunk=8
+    )
+    p = init_params(key, cfg)
+    x1, _ = forward(p, toks[:, :16], cfg, topo1)
+    x2, _ = forward(
+        p, toks[:, :16], dataclasses.replace(cfg, attn_impl="xla"),
+        topo1,
+    )
+    np.testing.assert_allclose(
+        np.asarray(x1), np.asarray(x2), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_pallas_attention_in_model(key, topo1):
+    """The model wired to the Pallas flash kernel (interpret)."""
+    cfg = dataclasses.replace(
+        tiny_gqa(n_layers=1, d_model=128, n_heads=2, n_kv_heads=1),
+        attn_impl="pallas_interpret",
+    )
+    toks = jax.random.randint(key, (1, 128), 0, 97)
+    p = init_params(key, cfg)
+    x1, _ = forward(p, toks, cfg, topo1)
+    x2, _ = forward(
+        p, toks, dataclasses.replace(cfg, attn_impl="xla"), topo1
+    )
+    np.testing.assert_allclose(
+        np.asarray(x1), np.asarray(x2), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_param_count_formula(key):
+    for name, cfg in CONFIGS.items():
+        if name == "unrolled":
+            continue
+        p = init_params(key, cfg)
+        actual = sum(
+            int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(p)
+        )
+        # formula excludes norm scales (2L*d + d) and MLA norms
+        norms = 2 * cfg.n_layers * cfg.d_model + cfg.d_model
+        if cfg.attn_type == "mla":
+            norms += cfg.n_layers * (cfg.q_lora_rank + cfg.kv_lora_rank)
+        assert cfg.n_params() == actual - norms, name
+
+
+def test_param_specs_tree_matches(key, topo1):
+    for cfg in CONFIGS.values():
+        p = init_params(key, cfg)
+        specs = param_specs(cfg, topo1)
+        # same tree structure -> zip succeeds
+        jax.tree_util.tree_map(
+            lambda a, b: None, p, specs,
+            is_leaf=lambda x: not isinstance(x, dict),
+        )
+
+
+def test_moe_balance_aux(key, topo1):
+    cfg = CONFIGS["moe"]
+    p = init_params(key, cfg)
+    toks = jax.random.randint(key, (4, 16), 0, 97)
+    _, aux = forward(p, toks, cfg, topo1)
+    # perfectly balanced router gives aux ~= n_layers (E * (1/E^2) * E)
+    assert 0.5 * cfg.n_layers < float(aux) < 3.0 * cfg.n_layers

@@ -1,0 +1,87 @@
+"""Strict-weak-ordering laws (paper §III properties 1-4) for every
+ordering, via hypothesis: the key-based representation makes
+``w1 < w2  iff  key(w1) < key(w2)``, so the laws reduce to properties
+of the key function — which we verify directly on sampled workitems.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_ordering
+from repro.core.eagm import make_policy, paper_variant_grid
+
+ORDERINGS = ["chaotic", "dijkstra", "delta:3", "delta:7", "kla:1", "kla:3"]
+
+wi = st.tuples(
+    st.floats(0, 1e6, allow_nan=False, width=32),  # distance
+    st.integers(0, 1000),                          # level
+)
+
+
+def key_of(spec, w):
+    o = make_ordering(spec)
+    d = jnp.float32(w[0])
+    l = jnp.float32(w[1])
+    return float(o.class_key(d, l))
+
+
+def less(spec, w1, w2):
+    return key_of(spec, w1) < key_of(spec, w2)
+
+
+@pytest.mark.parametrize("spec", ORDERINGS)
+@given(w1=wi, w2=wi, w3=wi)
+@settings(max_examples=60, deadline=None)
+def test_strict_weak_ordering_laws(spec, w1, w2, w3):
+    # 1) irreflexive
+    assert not less(spec, w1, w1)
+    # 2) asymmetric
+    if less(spec, w1, w2):
+        assert not less(spec, w2, w1)
+    # 3) transitive
+    if less(spec, w1, w2) and less(spec, w2, w3):
+        assert less(spec, w1, w3)
+    # 4) incomparability is transitive
+    inc12 = not less(spec, w1, w2) and not less(spec, w2, w1)
+    inc23 = not less(spec, w2, w3) and not less(spec, w3, w2)
+    if inc12 and inc23:
+        assert not less(spec, w1, w3) and not less(spec, w3, w1)
+
+
+@given(w1=wi, w2=wi)
+@settings(max_examples=30, deadline=None)
+def test_chaotic_single_class(w1, w2):
+    assert not less("chaotic", w1, w2)
+
+
+@given(w=wi, dw=st.floats(0.0009765625, 100, width=32))
+@settings(max_examples=30, deadline=None)
+def test_monotone_keys_under_relaxation(w, dw):
+    """Generated workitems (distance + positive weight) never land in
+    a smaller equivalence class — the AGM execution invariant."""
+    for spec in ["dijkstra", "delta:5"]:
+        k1 = key_of(spec, w)
+        k2 = key_of(spec, (w[0] + dw, w[1]))
+        assert k2 >= k1
+    k1 = key_of("kla:2", w)
+    k2 = key_of("kla:2", (w[0] + dw, w[1] + 1))
+    assert k2 >= k1
+
+
+def test_policy_grid_matches_paper():
+    grid = paper_variant_grid(deltas=(3, 5, 7), ks=(1, 2, 3))
+    names = {p.name for p in grid}
+    # 7 roots x 4 variants + dijkstra baseline
+    assert len(grid) == 7 * 4 + 1
+    assert "chaotic+threadq" in names          # the paper's winner
+    assert "delta5+buffer" in names            # classic Δ-stepping
+    assert "dijkstra+buffer" in names
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        make_policy("delta:5", "warpq")
+    with pytest.raises(ValueError):
+        make_ordering("bogus")
