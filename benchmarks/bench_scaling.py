@@ -13,9 +13,9 @@ import sys
 CHILD = r"""
 import json
 import numpy as np, jax
-from repro.graph import rmat2, partition_1d
-from repro.core import (EngineConfig, run_distributed, make_policy,
-                        sssp_sources, model_time_s)
+from repro.graph import rmat2
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import model_time_s
 
 rows = []
 for P, scale in [(1, 8), (2, 9), (4, 10), (8, 11)]:  # weak scaling
@@ -28,15 +28,16 @@ for P, scale in [(1, 8), (2, 9), (4, 10), (8, 11)]:  # weak scaling
         mesh = jax.make_mesh((2, 2), ("data", "model"))
     else:
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    pg = partition_1d(g, P)
     for root, variant in [("delta:5", "buffer"), ("delta:5", "threadq"),
                           ("chaotic", "threadq"), ("kla:1", "nodeq")]:
-        pol = make_policy(root, variant, chunk_size=256)
-        cfg = EngineConfig(policy=pol, exchange="a2a")
-        d, m = run_distributed(pg, mesh, cfg, sssp_sources(0))
+        solver = Solver(
+            SolverConfig(root=root, variant=variant, exchange="a2a",
+                         chunk_size=256),
+            mesh=mesh)
+        sol = solver.solve(Problem(g, SingleSource(0)))
         rows.append(dict(P=P, scale=scale, root=root, variant=variant,
-                         model_ms=model_time_s(m, P) * 1e3,
-                         **m.as_dict()))
+                         model_ms=model_time_s(sol.metrics, P) * 1e3,
+                         **sol.metrics.as_dict()))
 print(json.dumps(rows))
 """
 

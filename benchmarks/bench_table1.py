@@ -18,10 +18,9 @@ import sys
 CHILD = r"""
 import json
 import numpy as np, jax
-from repro.graph import (rmat1, small_world_graph, grid_road_graph,
-                         partition_1d)
-from repro.core import (EngineConfig, run_distributed, make_policy,
-                        sssp_sources, dijkstra_reference, model_time_s)
+from repro.graph import rmat1, small_world_graph, grid_road_graph
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference, model_time_s
 
 GRAPHS = [
     # (table-I stand-in, generator, AGM parameters)
@@ -37,15 +36,17 @@ GRAPHS = [
 rows = []
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 for gname, g, algs in GRAPHS:
-    pg = partition_1d(g, 8)
     ref = dijkstra_reference(g, 0)
     for root, _ in algs:
         for variant in ["buffer", "threadq", "nodeq", "numaq"]:
-            pol = make_policy(root, variant, chunk_size=256)
-            cfg = EngineConfig(policy=pol, exchange="a2a")
-            d, m = run_distributed(pg, mesh, cfg, sssp_sources(0))
+            solver = Solver(
+                SolverConfig(root=root, variant=variant, exchange="a2a",
+                             chunk_size=256),
+                mesh=mesh)
+            sol = solver.solve(Problem(g, SingleSource(0)))
+            m = sol.metrics
             ok = np.allclose(np.where(np.isinf(ref), -1, ref),
-                             np.where(np.isinf(d), -1, d))
+                             np.where(np.isinf(sol.state), -1, sol.state))
             rows.append(dict(graph=gname, n=g.n, m=g.m, root=root,
                              variant=variant, ok=bool(ok),
                              model_ms=model_time_s(m, 64) * 1e3,

@@ -19,25 +19,27 @@ import sys
 CHILD = r"""
 import json
 import numpy as np, jax
-from repro.graph import rmat1, rmat2, partition_1d
-from repro.core import (EngineConfig, run_distributed, make_policy,
-                        sssp_sources, dijkstra_reference, model_time_s)
+from repro.graph import rmat1, rmat2
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference, model_time_s
 
 SCALE = %(scale)d
 rows = []
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 for gname, gen in [("rmat1", rmat1), ("rmat2", rmat2)]:
     g = gen(SCALE, seed=7)
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    pg = partition_1d(g, 8)
     ref = dijkstra_reference(g, 0)
     for root in ["delta:3", "delta:5", "delta:7", "kla:1", "kla:2",
                  "kla:3", "chaotic"]:
         for variant in ["buffer", "threadq", "nodeq", "numaq"]:
-            pol = make_policy(root, variant, chunk_size=256)
-            cfg = EngineConfig(policy=pol, exchange="a2a")
-            d, m = run_distributed(pg, mesh, cfg, sssp_sources(0))
+            solver = Solver(
+                SolverConfig(root=root, variant=variant, exchange="a2a",
+                             chunk_size=256),
+                mesh=mesh)
+            sol = solver.solve(Problem(g, SingleSource(0)))
+            m = sol.metrics
             ok = np.allclose(np.where(np.isinf(ref), -1, ref),
-                             np.where(np.isinf(d), -1, d))
+                             np.where(np.isinf(sol.state), -1, sol.state))
             rows.append(dict(
                 graph=gname, scale=SCALE, root=root, variant=variant,
                 ok=bool(ok), model_ms=model_time_s(m, 256) * 1e3,

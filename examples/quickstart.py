@@ -3,21 +3,29 @@
 Builds a Graph500-style R-MAT graph, runs the self-stabilizing SSSP
 kernel three ways — (1) the literal Algorithm 1 synchronous sweep,
 (2) the logical AGM (Definition 3 semantics), (3) the distributed
-EAGM engine — and shows that orderings trade work for synchronization
-exactly as the paper claims.
+EAGM engine behind the repro.api facade — then uses the two serving
+features the facade adds: batched sources and self-stabilizing warm
+restarts.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import dataclasses
+
 import numpy as np
 
+from repro.api import Problem, SingleSource, Solver
 from repro.core import (
-    EngineConfig, dijkstra_reference, make_ordering, make_policy,
-    model_time_s, run_distributed, run_logical, sssp_agm, sssp_sources,
+    dijkstra_reference, make_ordering, model_time_s, run_logical,
+    sssp_agm,
 )
 from repro.core.selfstab import synchronous_sweep
-from repro.graph import partition_1d, rmat1
-from repro.launch.mesh import make_cpu_topology
+from repro.graph import rmat1
+
+
+def agrees(ref, d):
+    return np.allclose(np.where(np.isinf(ref), -1, ref),
+                       np.where(np.isinf(d), -1, d))
 
 
 def main():
@@ -32,37 +40,52 @@ def main():
     rng = np.random.default_rng(0)
     d0 = rng.uniform(0, 100, g.n).astype(np.float32)
     d = synchronous_sweep(g, 0, d0, iters=600)
-    ok = np.allclose(np.where(np.isinf(ref), -1, ref),
-                     np.where(np.isinf(d), -1, d))
     print(f"[1] self-stabilizing sweep from random state: "
-          f"{'stabilized correctly' if ok else 'FAILED'}")
+          f"{'stabilized correctly' if agrees(ref, d) else 'FAILED'}")
 
     # 2. the logical AGM: ordering => equivalence classes => less work
     print("\n[2] logical AGM (Definition 3): ordering vs work")
     for spec in ["chaotic", "delta:20", "dijkstra"]:
         dist, m = run_logical(sssp_agm(g, 0, make_ordering(spec)))
-        assert np.allclose(np.where(np.isinf(ref), -1, ref),
-                           np.where(np.isinf(dist), -1, dist))
+        assert agrees(ref, dist)
         print(f"    {spec:9s} classes={m.classes:5d} "
               f"relaxations={m.relaxations:8d} commits={m.commits}")
 
-    # 3. the distributed EAGM engine (same code the 512-chip dry-run
-    #    lowers), with the paper's best variant
-    print("\n[3] distributed EAGM engine")
-    topo = make_cpu_topology()
-    pg = partition_1d(g, topo.n_devices)
-    for root, variant in [("delta:20", "buffer"),
-                          ("chaotic", "threadq")]:
-        cfg = EngineConfig(policy=make_policy(root, variant,
-                                              chunk_size=512))
-        dist, m = run_distributed(pg, topo.mesh, cfg, sssp_sources(0))
-        assert np.allclose(np.where(np.isinf(ref), -1, ref),
-                           np.where(np.isinf(dist), -1, dist))
-        print(f"    {root:9s}+{variant:8s} supersteps={m.supersteps:4d} "
+    # 3. the distributed EAGM engine through the facade: one spec
+    #    string per family member, compiled once per shape
+    print("\n[3] distributed EAGM engine (repro.api)")
+    for spec in ["delta:20+buffer", "chaotic+threadq"]:
+        solver = Solver(spec + "/a2a")
+        sol = solver.solve(Problem(g, SingleSource(0)))
+        assert agrees(ref, sol.state)
+        m = sol.metrics
+        print(f"    {spec:16s} supersteps={m.supersteps:4d} "
               f"relax={m.relaxations:8d} "
               f"cost-model(256 chips)={model_time_s(m, 256)*1e3:6.2f} ms")
-    print("\nall three layers agree with Dijkstra — see DESIGN.md "
-          "for how the EAGM hierarchy maps to a TPU pod")
+
+    # 4. serving features: batched sources share one engine call,
+    #    and a warm restart stabilizes a perturbed graph in a few
+    #    supersteps (paper §II — the kernel converges from any state
+    #    the perturbation left valid)
+    print("\n[4] serving: batched sources + warm restart")
+    solver = Solver("chaotic+threadq/a2a")
+    sols = solver.solve_batch(
+        [Problem(g, SingleSource(v)) for v in (0, 17, 99)]
+    )
+    print(f"    batch of 3 sources: supersteps="
+          f"{[s.metrics.supersteps for s in sols]}")
+
+    g2 = dataclasses.replace(g, weight=g.weight.copy(), name="cheaper")
+    g2.weight[rng.integers(0, g2.m, 50)] *= 0.25  # some edges cheapen
+    warm = solver.resolve(sols[0], graph=g2)
+    cold = solver.solve(Problem(g2, SingleSource(0)))
+    assert agrees(cold.state, warm.state)
+    print(f"    warm restart after perturbation: "
+          f"{warm.metrics.supersteps} supersteps "
+          f"(cold solve: {cold.metrics.supersteps})")
+
+    print("\nall layers agree with Dijkstra — see DESIGN.md for how "
+          "the EAGM hierarchy maps to a TPU pod")
 
 
 if __name__ == "__main__":

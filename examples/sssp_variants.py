@@ -1,7 +1,7 @@
 """The paper's full evaluation grid (Figures 5-7) at laptop scale:
 every (AGM root ordering × EAGM spatial variant), verified against
 Dijkstra, with the work/sync metrics the paper's timings decompose
-into.
+into.  Each family member is one repro.api spec string.
 
     PYTHONPATH=src python examples/sssp_variants.py [--scale 10]
 """
@@ -10,12 +10,9 @@ import argparse
 
 import numpy as np
 
-from repro.core import (
-    EngineConfig, dijkstra_reference, model_time_s, paper_variant_grid,
-    run_distributed, sssp_sources,
-)
-from repro.graph import partition_1d, rmat2
-from repro.launch.mesh import make_cpu_topology
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference, model_time_s, paper_variant_specs
+from repro.graph import rmat2
 
 
 def main():
@@ -24,24 +21,23 @@ def main():
     args = ap.parse_args()
 
     g = rmat2(args.scale, seed=3)
-    topo = make_cpu_topology()
-    pg = partition_1d(g, topo.n_devices)
     ref = dijkstra_reference(g, 0)
     print(f"graph {g.name}: |V|={g.n} |E|={g.m}\n")
     print(f"{'variant':22s} {'steps':>6s} {'relax':>9s} {'commits':>8s} "
           f"{'xchg MB':>8s} {'model ms':>9s}")
 
     best = None
-    for pol in paper_variant_grid(deltas=(5,), ks=(1, 2)):
-        cfg = EngineConfig(policy=pol, exchange="a2a")
-        dist, m = run_distributed(pg, topo.mesh, cfg, sssp_sources(0))
+    for spec in paper_variant_specs(deltas=(5,), ks=(1, 2)):
+        solver = Solver(SolverConfig.from_spec(spec, chunk_size=1024))
+        sol = solver.solve(Problem(g, SingleSource(0)))
         ok = np.allclose(np.where(np.isinf(ref), -1, ref),
-                         np.where(np.isinf(dist), -1, dist))
-        assert ok, pol.name
+                         np.where(np.isinf(sol.state), -1, sol.state))
+        assert ok, spec
+        m = sol.metrics
         ms = model_time_s(m, 256) * 1e3
         if best is None or ms < best[1]:
-            best = (pol.name, ms)
-        print(f"{pol.name:22s} {m.supersteps:6d} {m.relaxations:9d} "
+            best = (spec, ms)
+        print(f"{spec:22s} {m.supersteps:6d} {m.relaxations:9d} "
               f"{m.commits:8d} {m.exchange_bytes/1e6:8.1f} {ms:9.2f}")
     print(f"\nfastest under the pod cost model: {best[0]} "
           f"({best[1]:.2f} ms)")

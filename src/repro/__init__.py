@@ -1,8 +1,11 @@
 """repro: AGM/EAGM distributed graph algorithms (Kanewala et al. 2017)
 as a multi-pod JAX framework, plus the assigned architecture zoo.
 
-Subpackages: core (the paper), graph, kernels (Pallas), models,
-train, data, configs (--arch registry), launch, roofline.
+Public entry point: ``repro.api`` (Problem/Solver facade —
+compile-once engines, batched sources, warm restarts).
+
+Subpackages: api (facade), core (the paper), graph, kernels (Pallas),
+models, train, data, configs (--arch registry), launch, roofline.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

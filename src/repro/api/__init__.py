@@ -1,0 +1,51 @@
+"""repro.api — the single public entry point for graph queries.
+
+The paper generates a *family* of algorithms from one self-stabilizing
+kernel plus an ordering; this package presents the family the same
+way: a fixed machine (:class:`Solver`, compiled once per shape/mesh/
+config) fed data (:class:`Problem`).
+
+    from repro.api import Problem, SingleSource, Solver
+
+    solver = Solver("delta:5+threadq/a2a")
+    sol = solver.solve(Problem(graph, SingleSource(0)))
+    sol.state, sol.metrics
+
+Capabilities beyond the old ``run_distributed``:
+  * compile-once/solve-many — engines live in a process-wide LRU cache
+  * ``solve_batch`` — a leading batch axis over sources, one engine
+    invocation for B queries
+  * ``resolve`` — self-stabilizing warm restart from a prior solution
+    after improving perturbations (new sources, cheaper edges)
+"""
+
+from repro.api.config import SolverConfig, as_config
+from repro.api.problem import (
+    EveryVertex,
+    ExplicitSources,
+    MultiSource,
+    Problem,
+    SingleSource,
+    SourceSpec,
+    as_source_spec,
+    get_processing,
+    register_processing,
+)
+from repro.api.solver import (
+    Solution,
+    Solver,
+    compiled_engine,
+    engine_cache_clear,
+    solve,
+    solve_with_engine_config,
+    trace_count,
+)
+
+__all__ = [
+    "SolverConfig", "as_config",
+    "Problem", "SingleSource", "MultiSource", "EveryVertex",
+    "ExplicitSources", "SourceSpec", "as_source_spec",
+    "register_processing", "get_processing",
+    "Solver", "Solution", "solve", "solve_with_engine_config",
+    "compiled_engine", "engine_cache_clear", "trace_count",
+]

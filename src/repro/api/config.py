@@ -1,0 +1,91 @@
+"""One validated configuration object for the whole solver stack.
+
+``SolverConfig`` folds the AGM root ordering, the EAGM spatial variant
+(paper §IV), the candidate-exchange strategy and the chunk/iteration
+knobs that used to be spread over ``EngineConfig`` + ``EAGMPolicy`` +
+string specs.  The compact spec grammar is
+
+    root[+variant][/exchange]     e.g.  "delta:5+threadq/a2a"
+
+with root ∈ {chaotic, dijkstra, delta:Δ, kla:K}, variant ∈ {buffer,
+threadq, nodeq, numaq} and exchange ∈ {a2a, pmin} — exactly the
+paper's Figure-4 family grid, one string per family member.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from repro.core.eagm import EAGMPolicy, VARIANT_LEVEL, make_policy
+from repro.core.engine import EngineConfig
+from repro.core.ordering import make_ordering
+from repro.core.processing import ProcessingFn
+
+EXCHANGES = ("a2a", "pmin")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    root: str = "delta:5"          # AGM ordering spec
+    variant: str = "buffer"        # EAGM spatial variant
+    exchange: str = "a2a"          # candidate exchange strategy
+    chunk_size: int = 1024         # B for chunk-level (threadq) draining
+    max_iters: int = 10**9
+    collect_metrics: bool = True
+
+    def __post_init__(self):
+        make_ordering(self.root)  # raises on a bad ordering spec
+        if self.variant not in VARIANT_LEVEL:
+            raise ValueError(
+                f"variant must be one of {sorted(VARIANT_LEVEL)}, "
+                f"got {self.variant!r}"
+            )
+        if self.exchange not in EXCHANGES:
+            raise ValueError(
+                f"exchange must be one of {EXCHANGES}, got {self.exchange!r}"
+            )
+        if self.chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive: {self.chunk_size}")
+        if self.max_iters <= 0:
+            raise ValueError(f"max_iters must be positive: {self.max_iters}")
+
+    @classmethod
+    def from_spec(cls, spec: str, **overrides) -> "SolverConfig":
+        """Parse ``"root[+variant][/exchange]"``; keyword overrides win
+        over the parsed fields."""
+        rest = spec.strip()
+        if "/" in rest:
+            rest, exchange = rest.rsplit("/", 1)
+            overrides.setdefault("exchange", exchange.strip())
+        if "+" in rest:
+            rest, variant = rest.split("+", 1)
+            overrides.setdefault("variant", variant.strip())
+        return cls(root=rest.strip(), **overrides)
+
+    @property
+    def name(self) -> str:
+        return f"{self.root}+{self.variant}/{self.exchange}"
+
+    @property
+    def policy(self) -> EAGMPolicy:
+        return make_policy(self.root, self.variant, chunk_size=self.chunk_size)
+
+    def engine_config(self, processing: ProcessingFn) -> EngineConfig:
+        return EngineConfig(
+            policy=self.policy,
+            processing=processing,
+            exchange=self.exchange,
+            max_iters=self.max_iters,
+            collect_metrics=self.collect_metrics,
+        )
+
+
+def as_config(c: Union[str, SolverConfig, None]) -> SolverConfig:
+    if c is None:
+        return SolverConfig()
+    if isinstance(c, str):
+        return SolverConfig.from_spec(c)
+    if isinstance(c, SolverConfig):
+        return c
+    raise TypeError(f"cannot interpret {c!r} as a SolverConfig")

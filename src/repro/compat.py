@@ -1,0 +1,38 @@
+"""Version compatibility shims.
+
+``jax.shard_map`` only became a top-level export in jax 0.5.x; the
+pinned 0.4.37 ships it as ``jax.experimental.shard_map.shard_map``.
+Everything in this repo imports :func:`shard_map` from here so the
+same code runs on both sides of the rename.
+
+The experimental version also has no replication rule for ``while``
+(our engine's superstep loop) and needs ``check_rep=False``; the
+top-level version dropped that kwarg.  The wrapper passes it exactly
+when the underlying function accepts it.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_ACCEPTS_CHECK_REP = "check_rep" in inspect.signature(_shard_map).parameters
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, **kwargs):
+    if _ACCEPTS_CHECK_REP:
+        kwargs.setdefault("check_rep", False)
+    else:
+        kwargs.pop("check_rep", None)
+    return _shard_map(f, **kwargs)
+
+
+__all__ = ["shard_map"]

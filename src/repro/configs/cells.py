@@ -505,7 +505,7 @@ def sssp_cell(arch: str, cell: str, topo: Topology, *,
     """Abstract partitioned-graph SSSP solve on the production mesh.
     Shapes derive from (scale, avg_degree, width) without building
     the graph: rows/rank ~ n_local * ceil(avg_deg/width) * safety."""
-    from repro.core import EngineConfig, make_engine, make_policy
+    from repro.api import Solver, SolverConfig
     from repro.core.engine import build_step  # noqa: F401 (doc link)
 
     P_ = topo.n_devices
@@ -514,10 +514,12 @@ def sssp_cell(arch: str, cell: str, topo: Topology, *,
     n_pad = n_local * P_
     # virtual rows per rank: ceil(deg/width) summed ~ e/width + n_local
     rows = int(1.3 * (n_local * avg_degree / width + n_local))
-    pol = make_policy(root, variant, chunk_size=4096)
-    ecfg = EngineConfig(policy=pol, exchange=exchange,
-                        collect_metrics=True)
-    solve = make_engine(dict(n_parts=P_, n_local=n_local), topo.mesh, ecfg)
+    solver = Solver(
+        SolverConfig(root=root, variant=variant, exchange=exchange,
+                     chunk_size=4096),
+        mesh=topo.mesh,
+    )
+    solve = solver.compiled(n_parts=P_, n_local=n_local)
 
     args = (
         sds((P_, rows), jnp.int32),

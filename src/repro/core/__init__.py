@@ -19,7 +19,12 @@ from repro.core.ordering import (
 )
 from repro.core.processing import SSSP, BFS, CC, SSWP, ProcessingFn
 from repro.core.agm import AGM, sssp_agm, run_logical, dijkstra_reference
-from repro.core.eagm import EAGMPolicy, make_policy, paper_variant_grid
+from repro.core.eagm import (
+    EAGMPolicy,
+    make_policy,
+    paper_variant_grid,
+    paper_variant_specs,
+)
 from repro.core.engine import (
     EngineConfig,
     run_distributed,
@@ -35,6 +40,7 @@ __all__ = [
     "make_ordering", "SSSP", "BFS", "CC", "SSWP", "ProcessingFn",
     "AGM", "sssp_agm", "run_logical", "dijkstra_reference",
     "EAGMPolicy", "make_policy", "paper_variant_grid",
+    "paper_variant_specs",
     "EngineConfig", "run_distributed", "make_engine", "initial_state",
     "sssp_sources", "cc_sources", "WorkMetrics", "model_time_s",
 ]

@@ -91,20 +91,33 @@ def make_policy(
     )
 
 
-def paper_variant_grid(
-    deltas=(3.0, 5.0, 7.0), ks=(1, 2, 3), chunk_size: int = 1024
-) -> list[EAGMPolicy]:
-    """The paper's evaluation grid: {Δ-stepping, KLA, Chaotic} ×
-    {buffer, threadq, nodeq, numaq} (Figures 5-7), with the Δ and K
-    sweeps of the experiments, plus the Dijkstra AGM baseline."""
-    grid: list[EAGMPolicy] = []
+def paper_variant_specs(
+    deltas=(3.0, 5.0, 7.0), ks=(1, 2, 3)
+) -> list[str]:
+    """The paper's evaluation grid as ``root+variant`` spec strings:
+    {Δ-stepping, KLA, Chaotic} × {buffer, threadq, nodeq, numaq}
+    (Figures 5-7), with the Δ and K sweeps of the experiments, plus
+    the Dijkstra AGM baseline."""
     roots = (
         [f"delta:{d:g}" for d in deltas]
         + [f"kla:{k}" for k in ks]
         + ["chaotic"]
     )
-    for root in roots:
-        for variant in ("buffer", "threadq", "nodeq", "numaq"):
-            grid.append(make_policy(root, variant, chunk_size))
-    grid.append(make_policy("dijkstra", "buffer", chunk_size))
+    specs = [
+        f"{root}+{variant}"
+        for root in roots
+        for variant in ("buffer", "threadq", "nodeq", "numaq")
+    ]
+    specs.append("dijkstra+buffer")
+    return specs
+
+
+def paper_variant_grid(
+    deltas=(3.0, 5.0, 7.0), ks=(1, 2, 3), chunk_size: int = 1024
+) -> list[EAGMPolicy]:
+    """:func:`paper_variant_specs` materialized as policies."""
+    grid: list[EAGMPolicy] = []
+    for spec in paper_variant_specs(deltas, ks):
+        root, variant = spec.split("+", 1)
+        grid.append(make_policy(root, variant, chunk_size))
     return grid

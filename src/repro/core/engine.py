@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.eagm import EAGMPolicy
 from repro.core.metrics import WorkMetrics
 from repro.core.ordering import needs_level
@@ -250,9 +251,22 @@ def make_engine(
     pg_shape: dict,
     mesh: Mesh,
     cfg: EngineConfig,
+    *,
+    batch: Optional[int] = None,
+    trace_hook: Optional[callable] = None,
 ):
     """Return a jitted distributed solver for graphs with the given
     partition shape.  ``pg_shape`` = dict(n_parts, n_local, rows, width).
+
+    ``batch=B`` builds the batched-sources engine: state arrays carry a
+    batch axis — (P, B, n_local+1) in, (P, B, n_local) out — and the
+    superstep loop is vmapped over it inside ``shard_map``, so B
+    queries share one graph residency and one collective schedule.
+    Monotonicity makes the shared loop safe: a converged batch element
+    has no pending workitems, so extra supersteps are no-ops on it.
+
+    ``trace_hook`` is called once per jit trace (not per call) — the
+    facade's compile-once tests count traces through it.
     """
     axis_names = tuple(mesh.axis_names)
     mesh_shape = tuple(mesh.devices.shape)
@@ -264,15 +278,25 @@ def make_engine(
 
     loop = build_step(cfg, axis_names, mesh_shape, n_local, n_parts)
 
-    def local(row_src, col, wgt, D, T, L):
-        # shard_map hands each device a leading axis of size 1
-        Dn, it, commits, relax, classes = loop(
-            row_src[0], col[0], wgt[0], D[0], T[0], L[0]
-        )
-        return Dn[None], it, commits, relax, classes
+    if batch is None:
+        def local(row_src, col, wgt, D, T, L):
+            # shard_map hands each device a leading axis of size 1
+            Dn, it, commits, relax, classes = loop(
+                row_src[0], col[0], wgt[0], D[0], T[0], L[0]
+            )
+            return Dn[None], it, commits, relax, classes
+    else:
+        vloop = jax.vmap(loop, in_axes=(None, None, None, 0, 0, 0))
+
+        def local(row_src, col, wgt, D, T, L):
+            # D/T/L local slices are (1, B, n_local+1)
+            Dn, it, commits, relax, classes = vloop(
+                row_src[0], col[0], wgt[0], D[0], T[0], L[0]
+            )
+            return Dn[None], it, commits, relax, classes
 
     shard = P(axis_names)  # leading axis split over the whole mesh
-    sharded = jax.shard_map(
+    sharded = shard_map(
         local,
         mesh=mesh,
         in_specs=(shard, shard, shard, shard, shard, shard),
@@ -281,6 +305,8 @@ def make_engine(
 
     @jax.jit
     def solve(row_src, col, wgt, D0, T0, L0):
+        if trace_hook is not None:
+            trace_hook()
         return sharded(row_src, col, wgt, D0, T0, L0)
 
     return solve
@@ -307,37 +333,42 @@ def initial_state(
     return D, T, L
 
 
+def initial_state_batch(
+    pg: PartitionedGraph,
+    processing: ProcessingFn,
+    sources_batch: list[list[tuple]],
+):
+    """Stack per-query initial states along a batch axis: (P, B,
+    n_local+1) arrays for the ``batch=B`` engine."""
+    per = [initial_state(pg, processing, s) for s in sources_batch]
+    D = np.stack([d for d, _, _ in per], axis=1)
+    T = np.stack([t for _, t, _ in per], axis=1)
+    L = np.stack([l for _, _, l in per], axis=1)
+    return D, T, L
+
+
 def run_distributed(
     pg: PartitionedGraph,
     mesh: Mesh,
     cfg: EngineConfig,
     sources: list[tuple],
 ) -> tuple[np.ndarray, WorkMetrics]:
-    """Solve and return (state[:n], metrics)."""
-    solve = make_engine(
-        dict(n_parts=pg.n_parts, n_local=pg.n_local), mesh, cfg
+    """Deprecated: use :class:`repro.api.Solver` (compile-once cache,
+    batched sources, warm restarts).  This shim keeps the old signature
+    working; it routes through the facade's shared engine cache, so
+    repeated calls on the same shapes no longer re-trace.
+    """
+    import warnings
+
+    warnings.warn(
+        "run_distributed is deprecated; use repro.api.Solver "
+        "(see README 'Migrating from run_distributed')",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    D0, T0, L0 = initial_state(pg, cfg.processing, sources)
-    D, it, commits, relax, classes = solve(
-        pg.row_src, pg.col, pg.wgt, D0, T0, L0
-    )
-    D = np.asarray(D).reshape(-1)[: pg.n]
-    it = int(it)
-    m = WorkMetrics(
-        classes=int(classes),
-        commits=int(commits),
-        relaxations=int(relax),
-        supersteps=it,
-        workitems=int(commits),
-    )
-    # analytic exchange-byte accounting (per device, summed over devices)
-    bytes_per_iter_per_dev = (
-        pg.n_pad * 4 * (2 if cfg.exchange == "pmin" else 1)
-        * (pg.n_parts - 1) // max(1, pg.n_parts)
-    )
-    m.exchange_bytes = it * bytes_per_iter_per_dev * pg.n_parts
-    m.collective_rounds = it * (3 if cfg.collect_metrics else 2)
-    return D, m
+    from repro.api.solver import solve_with_engine_config
+
+    return solve_with_engine_config(pg, mesh, cfg, sources)
 
 
 def sssp_sources(source: int) -> list[tuple]:

@@ -17,7 +17,7 @@ A :class:`ProcessingFn` specifies, in jnp-traceable form:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -30,6 +30,15 @@ class ProcessingFn:
     reduce: Callable       # jnp.minimum or jnp.maximum
     worst: float           # identity of `reduce` (= "no candidate")
     uses_weights: bool = True
+    # natural initial workitem state for a source vertex (π^sssp: 0;
+    # CC: the vertex's own label; SSWP: unbounded capacity).  None
+    # means 0.0 — the additive-path default.
+    source_init: Optional[Callable] = None
+
+    def initial_value(self, vertex: int) -> float:
+        if self.source_init is None:
+            return 0.0
+        return float(self.source_init(vertex))
 
     def reduce_array(self, x, axis):
         return (
@@ -65,6 +74,7 @@ CC = ProcessingFn(
     reduce=jnp.minimum,
     worst=float("inf"),
     uses_weights=False,
+    source_init=lambda v: float(v),
 )
 
 # Single-source widest path: maximize the bottleneck capacity.
@@ -74,6 +84,7 @@ SSWP = ProcessingFn(
     better=lambda a, b: a > b,
     reduce=jnp.maximum,
     worst=float("-inf"),
+    source_init=lambda v: float("inf"),
 )
 
 PROCESSING_FNS = {p.name: p for p in (SSSP, BFS, CC, SSWP)}

@@ -11,6 +11,10 @@ input-shape × mesh) cell on 512 placeholder devices.
 Per cell it records memory_analysis() (proves it fits),
 cost_analysis() (FLOPs/bytes for §Roofline) and the parsed collective
 traffic, into experiments/dryrun/<arch>__<cell>__<mesh>.json.
+
+The sssp cells lower the repro.api facade's compiled engine
+(configs/cells.py:sssp_cell builds it via Solver.compiled), so what
+the dry-run proves fits is exactly what Solver.solve dispatches.
 """
 
 import argparse

@@ -1,9 +1,14 @@
-"""SSSP driver: solve on a generated graph with any (ordering × EAGM
-variant × exchange), verify against Dijkstra, report work/sync
-metrics and cost-model time.
+"""SSSP driver on the repro.api facade: solve on a generated graph
+with any (ordering × EAGM variant × exchange) family member, verify
+against Dijkstra, report work/sync metrics and cost-model time.
 
     PYTHONPATH=src python -m repro.launch.sssp --graph rmat1 --scale 14 \
-        --root delta:5 --variant threadq --exchange a2a
+        --spec delta:5+threadq/a2a
+    # batched query serving (one engine invocation for all sources):
+    PYTHONPATH=src python -m repro.launch.sssp --sources 0 7 42
+
+The old --root/--variant/--exchange flags still work and are folded
+into the spec.
 """
 
 from __future__ import annotations
@@ -11,7 +16,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
 
@@ -36,13 +40,17 @@ def main() -> None:
     ap.add_argument("--graph", default="rmat1",
                     choices=["rmat1", "rmat2", "road", "smallworld"])
     ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--spec", default=None,
+                    help="solver spec root[+variant][/exchange], "
+                         "e.g. delta:5+threadq/a2a")
     ap.add_argument("--root", default="delta:5")
     ap.add_argument("--variant", default="buffer",
                     choices=["buffer", "threadq", "nodeq", "numaq"])
     ap.add_argument("--exchange", default="a2a",
                     choices=["a2a", "pmin"])
     ap.add_argument("--chunk", type=int, default=1024)
-    ap.add_argument("--source", type=int, default=0)
+    ap.add_argument("--sources", type=int, nargs="+", default=[0],
+                    help=">1 source solves the batch in one engine call")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--problem", default="sssp",
@@ -50,50 +58,57 @@ def main() -> None:
                     help="processing function (all share the engine)")
     args = ap.parse_args()
 
-    from repro.core import (
-        BFS, CC, SSSP, SSWP, EngineConfig, cc_sources,
-        dijkstra_reference, make_policy, model_time_s,
-        run_distributed, sssp_sources,
+    from repro.api import (
+        EveryVertex, Problem, SingleSource, Solver, SolverConfig,
     )
-    from repro.graph import partition_1d
+    from repro.core import dijkstra_reference, model_time_s
     from repro.launch.mesh import make_cpu_topology
 
     g = build_graph(args.graph, args.scale, args.seed)
     topo = make_cpu_topology()
-    P = topo.n_devices
-    pg = partition_1d(g, P)
+
+    spec = args.spec or f"{args.root}+{args.variant}/{args.exchange}"
+    cfg = SolverConfig.from_spec(spec, chunk_size=args.chunk)
+    solver = Solver(cfg, mesh=topo.mesh)
+    pg = solver.partition(g)
     print(f"[sssp] {pg.describe()}")
 
-    processing = {"sssp": SSSP, "bfs": BFS, "cc": CC, "sswp": SSWP}[
-        args.problem
-    ]
     if args.problem == "cc":
-        sources = cc_sources(g.n)
-    elif args.problem == "sswp":
-        sources = [(args.source, float("inf"), 0)]
+        if args.sources != [0]:
+            print("[sssp] note: --sources is ignored for --problem cc "
+                  "(CC seeds every vertex)")
+        labels = ["all-vertices"]
+        problems = [Problem(g, EveryVertex(), processing="cc")]
     else:
-        sources = sssp_sources(args.source)
+        labels = [f"source={v}" for v in args.sources]
+        problems = [
+            Problem(g, SingleSource(v), processing=args.problem)
+            for v in args.sources
+        ]
 
-    pol = make_policy(args.root, args.variant, chunk_size=args.chunk)
-    cfg = EngineConfig(policy=pol, exchange=args.exchange,
-                       processing=processing)
     t0 = time.time()
-    dist, m = run_distributed(pg, topo.mesh, cfg, sources)
+    sols = solver.solve_batch(problems)
     wall = time.time() - t0
-    print(f"[sssp] policy={pol.name} exchange={args.exchange}")
-    print(f"[sssp] {m}")
-    print(f"[sssp] cpu_wall={wall:.2f}s "
-          f"cost_model(256 chips)={model_time_s(m, 256)*1e3:.2f}ms "
-          f"reached={int(np.isfinite(dist).sum())}/{g.n}")
+    print(f"[sssp] spec={cfg.name} batch={len(problems)}")
+    for label, sol in zip(labels, sols):
+        m = sol.metrics
+        print(f"[sssp] {label} {m}")
+        print(f"[sssp] cost_model(256 chips)={model_time_s(m, 256)*1e3:.2f}ms "
+              f"reached={int(np.isfinite(sol.state).sum())}/{g.n}")
+    print(f"[sssp] cpu_wall={wall:.2f}s total")
 
     if args.verify and args.problem == "sssp":
-        ref = dijkstra_reference(g, args.source)
-        ok = np.allclose(
-            np.where(np.isinf(ref), -1, ref),
-            np.where(np.isinf(dist), -1, dist),
-        )
-        print(f"[sssp] verify vs Dijkstra: {'OK' if ok else 'MISMATCH'}")
-        if not ok:
+        bad = 0
+        for src, sol in zip(args.sources, sols):
+            ref = dijkstra_reference(g, src)
+            ok = np.allclose(
+                np.where(np.isinf(ref), -1, ref),
+                np.where(np.isinf(sol.state), -1, sol.state),
+            )
+            print(f"[sssp] source={src} verify vs Dijkstra: "
+                  f"{'OK' if ok else 'MISMATCH'}")
+            bad += 0 if ok else 1
+        if bad:
             raise SystemExit(1)
     elif args.verify:
         print("[sssp] --verify oracle only wired for --problem sssp "

@@ -17,6 +17,7 @@ import contextvars
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models.common import fan_in_init
 
 # §Perf (dimenet/ogb_products): when set, every segment-reduce output
@@ -105,7 +106,7 @@ def scatter_sum_owner_aligned(values, index, n):
         return jax.ops.segment_sum(v, local_ids, num_segments=n_loc)
 
     trail = tuple([None] * (values.ndim - 1))
-    out = jax.shard_map(
+    out = shard_map(
         local, mesh=topo.mesh,
         in_specs=(P(axes, *trail), P(axes)),
         out_specs=P(axes, *trail),

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.common import Topology, swiglu
 
 
@@ -160,7 +161,7 @@ def moe_ffn(
         aux = jax.lax.pmean(aux, topo.axis_names)
         return out.reshape(xb.shape), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         fn,
         mesh=topo.mesh,
         in_specs=(

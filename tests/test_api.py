@@ -1,0 +1,281 @@
+"""repro.api facade: compile-once caching, batched sources, warm
+restarts, config parsing and the processing registry."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.api import (
+    EveryVertex, ExplicitSources, MultiSource, Problem, SingleSource,
+    Solver, SolverConfig, as_source_spec, get_processing,
+    register_processing,
+)
+from repro.core import SSSP, dijkstra_reference
+from repro.core.processing import ProcessingFn
+
+
+def close(a, b):
+    return np.allclose(
+        np.where(np.isinf(a), -1, a), np.where(np.isinf(b), -1, b)
+    )
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+@pytest.fixture(scope="module")
+def solver(mesh1):
+    return Solver("delta:5+threadq/a2a", mesh=mesh1)
+
+
+# ---------------------------------------------------------------- config
+
+
+def test_from_spec_full():
+    c = SolverConfig.from_spec("delta:5+threadq/pmin")
+    assert (c.root, c.variant, c.exchange) == ("delta:5", "threadq", "pmin")
+
+
+def test_from_spec_defaults_and_overrides():
+    c = SolverConfig.from_spec("kla:2")
+    assert (c.root, c.variant, c.exchange) == ("kla:2", "buffer", "a2a")
+    c = SolverConfig.from_spec("chaotic+nodeq", chunk_size=64)
+    assert c.variant == "nodeq" and c.chunk_size == 64
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        dict(root="nosuch:1"),
+        dict(variant="warpq"),
+        dict(exchange="rdma"),
+        dict(chunk_size=0),
+        dict(max_iters=0),
+    ],
+)
+def test_config_validation(bad):
+    with pytest.raises(ValueError):
+        SolverConfig(**bad)
+
+
+def test_config_is_hashable_and_frozen():
+    c = SolverConfig.from_spec("delta:5+threadq/a2a")
+    assert hash(c) == hash(SolverConfig.from_spec("delta:5+threadq/a2a"))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        c.root = "chaotic"
+
+
+# ------------------------------------------------------------- sources
+
+
+def test_source_spec_coercion():
+    assert as_source_spec(3) == SingleSource(3)
+    assert as_source_spec([1, 2]) == MultiSource((1, 2))
+    spec = as_source_spec([(1, 0.5, 0)])
+    assert isinstance(spec, ExplicitSources)
+    # numpy integers (e.g. drawn from rng.integers) coerce too
+    assert as_source_spec(np.int64(3)) == SingleSource(3)
+    assert as_source_spec(np.array([1, 2])) == MultiSource((1, 2))
+    assert as_source_spec([np.int32(1), np.int32(2)]) == MultiSource((1, 2))
+
+
+def test_source_defaults_per_processing(tiny_graphs):
+    g = tiny_graphs[0]
+    assert Problem(g, SingleSource(0)).source_items() == [(0, 0.0, 0)]
+    assert Problem(g, SingleSource(4), processing="sswp").source_items() \
+        == [(4, float("inf"), 0)]
+    cc = Problem(g, EveryVertex(), processing="cc").source_items()
+    assert cc[7] == (7, 7.0, 0) and len(cc) == g.n
+
+
+def test_source_out_of_range(tiny_graphs):
+    g = tiny_graphs[0]
+    with pytest.raises(ValueError):
+        Problem(g, SingleSource(g.n)).source_items()
+
+
+def test_register_processing(tiny_graphs, mesh1):
+    """A user-registered processing fn runs through the same engine:
+    SSSP with doubled edge weights == 2x the SSSP distances."""
+    from repro.api.problem import _REGISTRY
+
+    doubled = ProcessingFn(
+        name="sssp2x",
+        edge_update=lambda s, w: s + 2.0 * w,
+        better=lambda a, b: a < b,
+        reduce=jnp.minimum,
+        worst=float("inf"),
+    )
+    try:
+        register_processing(doubled)
+        assert get_processing("sssp2x") is doubled
+        with pytest.raises(ValueError):
+            register_processing(
+                ProcessingFn(
+                    name="sssp2x",
+                    edge_update=lambda s, w: s,
+                    better=lambda a, b: a < b,
+                    reduce=jnp.minimum,
+                    worst=float("inf"),
+                )
+            )
+        g = tiny_graphs[0]
+        solver = Solver("delta:5+buffer", mesh=mesh1)
+        ref = solver.solve(Problem(g, SingleSource(0))).state
+        sol = solver.solve(Problem(g, SingleSource(0), processing="sssp2x"))
+        assert close(2.0 * ref, sol.state)
+    finally:
+        _REGISTRY.pop("sssp2x", None)  # don't leak into other tests
+
+
+# --------------------------------------------------------- compile-once
+
+
+def test_solve_compiles_once(tiny_graphs, solver):
+    g = tiny_graphs[0]
+    solver.solve(Problem(g, SingleSource(0)))  # warm the cache
+    before = api.trace_count()
+    s1 = solver.solve(Problem(g, SingleSource(1)))
+    s2 = solver.solve(Problem(g, SingleSource(2)))
+    assert api.trace_count() == before, "re-traced on identical shapes"
+    assert close(dijkstra_reference(g, 1), s1.state)
+    assert close(dijkstra_reference(g, 2), s2.state)
+
+
+def test_solve_batch_compiles_once(tiny_graphs, solver):
+    g = tiny_graphs[0]
+    mk = lambda vs: [Problem(g, SingleSource(v)) for v in vs]
+    solver.solve_batch(mk([0, 1, 2]))  # warm the B=3 engine
+    before = api.trace_count()
+    sols = solver.solve_batch(mk([3, 4, 5]))
+    assert api.trace_count() == before, "batched engine re-traced"
+    assert len(sols) == 3
+
+
+def test_engine_cache_shared_across_solvers(tiny_graphs, mesh1):
+    g = tiny_graphs[0]
+    Solver("delta:7+buffer", mesh=mesh1).solve(Problem(g, SingleSource(0)))
+    before = api.trace_count()
+    Solver("delta:7+buffer", mesh=mesh1).solve(Problem(g, SingleSource(1)))
+    assert api.trace_count() == before
+
+
+# -------------------------------------------------------------- batching
+
+
+def test_solve_batch_matches_per_query(tiny_graphs, solver):
+    g = tiny_graphs[1]
+    vs = [0, 5, 11, 17]
+    batched = solver.solve_batch([Problem(g, SingleSource(v)) for v in vs])
+    for v, sol in zip(vs, batched):
+        single = solver.solve(Problem(g, SingleSource(v)))
+        assert close(single.state, sol.state), f"source {v}"
+        assert close(dijkstra_reference(g, v), sol.state), f"source {v}"
+
+
+def test_solve_batch_rejects_mixed_graphs(tiny_graphs, solver):
+    with pytest.raises(ValueError):
+        solver.solve_batch(
+            [Problem(tiny_graphs[0], SingleSource(0)),
+             Problem(tiny_graphs[1], SingleSource(0))]
+        )
+
+
+def test_solve_batch_singleton_and_empty(tiny_graphs, solver):
+    g = tiny_graphs[0]
+    assert solver.solve_batch([]) == []
+    [sol] = solver.solve_batch([Problem(g, SingleSource(0))])
+    assert close(dijkstra_reference(g, 0), sol.state)
+
+
+# ---------------------------------------------------------- warm restart
+
+
+def test_resolve_after_weight_decrease(tiny_graphs, solver):
+    """Self-stabilizing warm restart: after cheapening some edges the
+    previous solution stabilizes to the new Dijkstra fixpoint in fewer
+    supersteps than a cold solve of the perturbed graph."""
+    g = tiny_graphs[0]
+    sol = solver.solve(Problem(g, SingleSource(0)))
+
+    g2 = dataclasses.replace(g, weight=g.weight.copy(), name="perturbed")
+    rng = np.random.default_rng(7)
+    g2.weight[rng.integers(0, g2.m, 25)] *= 0.25
+    ref2 = dijkstra_reference(g2, 0)
+
+    warm = solver.resolve(sol, graph=g2)
+    cold = solver.solve(Problem(g2, SingleSource(0)))
+    assert close(ref2, warm.state)
+    assert warm.metrics.supersteps < cold.metrics.supersteps, (
+        warm.metrics, cold.metrics
+    )
+
+
+def test_resolve_added_source(tiny_graphs, solver):
+    g = tiny_graphs[0]
+    sol = solver.solve(Problem(g, SingleSource(0)))
+    warm = solver.resolve(sol, SingleSource(9))
+    ref = np.minimum(dijkstra_reference(g, 0), dijkstra_reference(g, 9))
+    assert close(ref, warm.state)
+
+
+def test_resolve_noop_is_stable(tiny_graphs, solver):
+    """Resolving with no perturbation terminates immediately at the
+    same fixpoint (the bootstrap sweep finds nothing pending)."""
+    g = tiny_graphs[0]
+    sol = solver.solve(Problem(g, SingleSource(0)))
+    warm = solver.resolve(sol)
+    assert close(sol.state, warm.state)
+    assert warm.metrics.supersteps <= 2  # bootstrap + empty drain
+
+
+def test_resolve_sswp(tiny_graphs, mesh1):
+    """Warm restart under the max-min semiring: widening an edge can
+    only improve capacities, so the prior solution is a valid start."""
+    g = tiny_graphs[0]
+    solver = Solver("chaotic+buffer", mesh=mesh1)
+    sol = solver.solve(Problem(g, SingleSource(0), processing="sswp"))
+    g2 = dataclasses.replace(g, weight=g.weight.copy(), name="wider")
+    rng = np.random.default_rng(3)
+    g2.weight[rng.integers(0, g2.m, 20)] *= 4.0
+    warm = solver.resolve(sol, graph=g2)
+    cold = solver.solve(Problem(g2, SingleSource(0), processing="sswp"))
+    assert close(cold.state, warm.state)
+
+
+# ------------------------------------------------------------- plumbing
+
+
+def test_partition_memo_sees_inplace_mutation(tiny_graphs, solver):
+    """In-place edge perturbation must invalidate the partition memo
+    (same object identity, different content)."""
+    g = tiny_graphs[2]
+    ref = dijkstra_reference(g, 0)
+    assert close(ref, solver.solve(Problem(g, SingleSource(0))).state)
+    old = g.weight.copy()
+    try:
+        g.weight *= 2.0  # mutate in place: id(g) unchanged
+        sol = solver.solve(Problem(g, SingleSource(0)))
+        assert close(2.0 * ref, sol.state)
+    finally:
+        g.weight[:] = old  # tiny_graphs is session-scoped
+
+
+def test_mesh_partition_mismatch_raises(tiny_graphs, mesh1):
+    from repro.graph import partition_1d
+
+    pg = partition_1d(tiny_graphs[0], 2)
+    with pytest.raises(ValueError):
+        Solver(mesh=mesh1).solve(Problem(pg, SingleSource(0)))
+
+
+def test_one_shot_solve(tiny_graphs, mesh1):
+    g = tiny_graphs[0]
+    sol = api.solve(Problem(g, SingleSource(0)), "delta:5", mesh=mesh1)
+    assert close(dijkstra_reference(g, 0), sol.state)

@@ -65,6 +65,62 @@ def test_engine_8_devices():
     assert "MULTIDEV-OK" in r.stdout
 
 
+CHILD_API = r"""
+import numpy as np, jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.api import Problem, SingleSource, Solver
+import repro.api as api
+from repro.core import dijkstra_reference
+from repro.graph import rmat1
+
+g = rmat1(9, seed=5)
+mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+for exchange in ['a2a', 'pmin']:
+    solver = Solver(f'delta:5+threadq/{exchange}', mesh=mesh)
+    # batched sources over the 8-device mesh
+    vs = [0, 3, 40]
+    sols = solver.solve_batch([Problem(g, SingleSource(v)) for v in vs])
+    for v, s in zip(vs, sols):
+        ref = dijkstra_reference(g, v)
+        assert np.allclose(np.where(np.isinf(ref), -1, ref),
+                           np.where(np.isinf(s.state), -1, s.state)), \
+            (exchange, v)
+    # compile-once: a second batch on the same shapes re-traces nothing
+    before = api.trace_count()
+    solver.solve_batch([Problem(g, SingleSource(v)) for v in (7, 9, 11)])
+    assert api.trace_count() == before, exchange
+    # warm restart after cheapening a few edges
+    w2 = g.weight.copy()
+    w2[np.random.default_rng(2).integers(0, g.m, 30)] *= 0.25
+    g2 = type(g)(g.n, g.src, g.dst, w2, name='cheap')
+    ref2 = dijkstra_reference(g2, 0)
+    warm = solver.resolve(sols[0], graph=g2)
+    cold = solver.solve(Problem(g2, SingleSource(0)))
+    assert np.allclose(np.where(np.isinf(ref2), -1, ref2),
+                       np.where(np.isinf(warm.state), -1, warm.state)), \
+        exchange
+    assert warm.metrics.supersteps < cold.metrics.supersteps, exchange
+print('API-MULTIDEV-OK')
+"""
+
+
+@pytest.mark.slow
+def test_api_facade_8_devices():
+    """Batched sources + warm restart through repro.api on an 8-device
+    (pod, data, model) mesh, both exchange paths."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", CHILD_API], env=env, capture_output=True,
+        text=True, timeout=900, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))
+        ),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "API-MULTIDEV-OK" in r.stdout
+
+
 CHILD_LM = r"""
 import numpy as np, jax, jax.numpy as jnp
 assert len(jax.devices()) == 8

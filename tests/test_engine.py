@@ -1,14 +1,16 @@
-"""Distributed EAGM engine (single-device mesh; the multi-device
-semantics run in tests/test_distributed_subprocess.py)."""
+"""Distributed EAGM engine, driven through the repro.api facade
+(single-device mesh; the multi-device semantics run in
+tests/test_distributed_subprocess.py)."""
 
 import jax
 import numpy as np
 import pytest
 
-from repro.core import (
-    BFS, CC, SSWP, EngineConfig, cc_sources, dijkstra_reference,
-    make_policy, run_distributed, sssp_sources,
+from repro.api import (
+    EveryVertex, ExplicitSources, Problem, SingleSource, Solver,
+    SolverConfig,
 )
+from repro.core import dijkstra_reference
 from repro.graph import partition_1d
 
 
@@ -35,23 +37,21 @@ VARIANTS = [
 def test_sssp_variants_match_oracle(tiny_graphs, mesh1, root, variant):
     g = tiny_graphs[0]
     ref = dijkstra_reference(g, 0)
-    pg = partition_1d(g, 1)
-    cfg = EngineConfig(policy=make_policy(root, variant, chunk_size=64))
-    d, m = run_distributed(pg, mesh1, cfg, sssp_sources(0))
-    assert close(ref, d), f"{root}+{variant}"
-    assert m.supersteps > 0 and m.commits > 0
+    solver = Solver(
+        SolverConfig(root=root, variant=variant, chunk_size=64), mesh=mesh1
+    )
+    sol = solver.solve(Problem(g, SingleSource(0)))
+    assert close(ref, sol.state), f"{root}+{variant}"
+    assert sol.metrics.supersteps > 0 and sol.metrics.commits > 0
 
 
 @pytest.mark.parametrize("exchange", ["a2a", "pmin"])
 def test_exchange_paths_agree(tiny_graphs, mesh1, exchange):
     g = tiny_graphs[1]
     ref = dijkstra_reference(g, 0)
-    pg = partition_1d(g, 1)
-    cfg = EngineConfig(
-        policy=make_policy("delta:5", "buffer"), exchange=exchange
-    )
-    d, _ = run_distributed(pg, mesh1, cfg, sssp_sources(0))
-    assert close(ref, d)
+    solver = Solver(f"delta:5+buffer/{exchange}", mesh=mesh1)
+    sol = solver.solve(Problem(g, SingleSource(0)))
+    assert close(ref, sol.state)
 
 
 def test_stale_workitems_are_harmless(tiny_graphs, mesh1):
@@ -59,18 +59,17 @@ def test_stale_workitems_are_harmless(tiny_graphs, mesh1):
     the initial set cost work but cannot corrupt the fixpoint."""
     g = tiny_graphs[0]
     ref = dijkstra_reference(g, 0)
-    pg = partition_1d(g, 1)
     rng = np.random.default_rng(1)
     extras = [
         (int(v), float(ref[v] + rng.uniform(0.5, 50)), 0)
         for v in rng.integers(0, g.n, 10)
         if np.isfinite(ref[v])
     ]
-    cfg = EngineConfig(policy=make_policy("delta:5", "buffer"))
-    d, _ = run_distributed(
-        pg, mesh1, cfg, sssp_sources(0) + extras
+    solver = Solver("delta:5+buffer", mesh=mesh1)
+    sol = solver.solve(
+        Problem(g, ExplicitSources([(0, 0.0, 0)] + extras))
     )
-    assert close(ref, d)
+    assert close(ref, sol.state)
 
 
 def test_bfs(tiny_graphs, mesh1):
@@ -80,12 +79,9 @@ def test_bfs(tiny_graphs, mesh1):
 
     g1 = Graph(g.n, g.src, g.dst, np.ones(g.m, np.float32))
     ref = dijkstra_reference(g1, 0)
-    pg = partition_1d(g, 1)
-    cfg = EngineConfig(
-        policy=make_policy("delta:1", "buffer"), processing=BFS
-    )
-    d, _ = run_distributed(pg, mesh1, cfg, sssp_sources(0))
-    assert close(ref, d)
+    solver = Solver("delta:1+buffer", mesh=mesh1)
+    sol = solver.solve(Problem(g, SingleSource(0), processing="bfs"))
+    assert close(ref, sol.state)
 
 
 def test_connected_components(mesh1):
@@ -118,12 +114,11 @@ def test_connected_components(mesh1):
         comp_min[r] = min(comp_min.get(r, v), v)
     ref = np.array([comp_min[find(v)] for v in range(n)], np.float64)
 
-    pg = partition_1d(g, 1)
-    cfg = EngineConfig(
-        policy=make_policy("chaotic", "buffer"), processing=CC
+    solver = Solver("chaotic+buffer", mesh=mesh1)
+    sol = solver.solve(Problem(g, EveryVertex(), processing="cc"))
+    assert np.array_equal(
+        sol.state.astype(np.int64), ref.astype(np.int64)
     )
-    labels, _ = run_distributed(pg, mesh1, cfg, cc_sources(n))
-    assert np.array_equal(labels.astype(np.int64), ref.astype(np.int64))
 
 
 def test_widest_path(tiny_graphs, mesh1):
@@ -136,7 +131,6 @@ def test_widest_path(tiny_graphs, mesh1):
     csr = coo_to_csr(g)
     width = np.full(g.n, -np.inf)
     width[0] = np.inf
-    heap = [(-np.inf, 0)]  # max-heap by negated width
     visited = np.zeros(g.n, bool)
     heap = [(-np.float64(np.inf), 0)]
     while heap:
@@ -152,26 +146,38 @@ def test_widest_path(tiny_graphs, mesh1):
                 width[u] = cand
                 heapq.heappush(heap, (-cand, int(u)))
 
-    pg = partition_1d(g, 1)
-    cfg = EngineConfig(
-        policy=make_policy("chaotic", "buffer"), processing=SSWP
-    )
-    d, _ = run_distributed(pg, mesh1, cfg, [(0, float("inf"), 0)])
-    assert close(width, d)
+    solver = Solver("chaotic+buffer", mesh=mesh1)
+    sol = solver.solve(Problem(g, SingleSource(0), processing="sswp"))
+    assert close(width, sol.state)
 
 
 def test_metrics_tradeoff(tiny_graphs, mesh1):
     """The paper's central tradeoff on the engine: stronger ordering
     => fewer relaxations, more supersteps."""
     g = tiny_graphs[0]
-    pg = partition_1d(g, 1)
     res = {}
-    for root, var in [("chaotic", "buffer"), ("delta:20", "buffer"),
-                      ("dijkstra", "buffer")]:
-        cfg = EngineConfig(policy=make_policy(root, var))
-        _, m = run_distributed(pg, mesh1, cfg, sssp_sources(0))
-        res[root] = m
+    for root in ["chaotic", "delta:20", "dijkstra"]:
+        solver = Solver(SolverConfig(root=root), mesh=mesh1)
+        sol = solver.solve(Problem(g, SingleSource(0)))
+        res[root] = sol.metrics
     assert res["dijkstra"].relaxations <= res["delta:20"].relaxations
     assert res["delta:20"].relaxations <= res["chaotic"].relaxations
     assert res["dijkstra"].supersteps >= res["delta:20"].supersteps
     assert res["delta:20"].supersteps >= res["chaotic"].supersteps
+
+
+def test_legacy_run_distributed_shim(tiny_graphs, mesh1):
+    """The deprecated entry point keeps working and agrees with the
+    facade."""
+    from repro.core import (
+        EngineConfig, make_policy, run_distributed, sssp_sources,
+    )
+
+    g = tiny_graphs[0]
+    ref = dijkstra_reference(g, 0)
+    pg = partition_1d(g, 1)
+    cfg = EngineConfig(policy=make_policy("delta:5", "buffer"))
+    with pytest.deprecated_call():
+        d, m = run_distributed(pg, mesh1, cfg, sssp_sources(0))
+    assert close(ref, d)
+    assert m.supersteps > 0
