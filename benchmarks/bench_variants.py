@@ -1,12 +1,23 @@
 """Paper Figures 5-7: Δ-stepping / KLA / Chaotic AGMs × EAGM variants
-(buffer, threadq, nodeq, numaq) on RMAT1 and RMAT2.
+(buffer, threadq, nodeq, numaq) × candidate-exchange strategies
+(dense a2a vs frontier-sparse vs auto) on RMAT1 and RMAT2.
 
 The container cannot time a Cray, so each variant reports the
 work/synchronization quantities its wall-clock decomposes into
-(relaxations, commits, supersteps, exchange bytes) plus the calibrated
-cost model over 256 chips (metrics.model_time_s) — reproducing the
-*shape* of the paper's comparisons.  Runs on 8 placeholder devices in
-a subprocess so pod/device/chunk-scoped orderings are distinct.
+(relaxations, commits, supersteps, actually-exchanged bytes) plus the
+calibrated cost model over 256 chips (metrics.model_time_s) and the
+measured wall time of one warm (compile-excluded) solve — reproducing
+the *shape* of the paper's comparisons and tracking the sparse-
+exchange win (per-superstep bytes scaling with the frontier capacity,
+not |V|).  Runs on 8 placeholder devices in a subprocess so
+pod/device/chunk-scoped orderings are distinct.
+
+CLI:  PYTHONPATH=src python benchmarks/bench_variants.py \
+          [--quick] [--scale N] [--json BENCH_variants.json]
+
+``--quick`` shrinks the grid (CI trajectory job); the JSON rows carry
+supersteps, bytes, bytes/superstep, fallbacks and wall time per
+variant × exchange so the perf trajectory accumulates across PRs.
 """
 
 from __future__ import annotations
@@ -16,44 +27,76 @@ import os
 import subprocess
 import sys
 
+EXCHANGES = ["a2a", "sparse", "auto"]
+
 CHILD = r"""
-import json
+import json, time
 import numpy as np, jax
 from repro.graph import rmat1, rmat2
 from repro.api import Problem, SingleSource, Solver, SolverConfig
 from repro.core import dijkstra_reference, model_time_s
 
 SCALE = %(scale)d
+QUICK = %(quick)d
 rows = []
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-for gname, gen in [("rmat1", rmat1), ("rmat2", rmat2)]:
+graphs = [("rmat1", rmat1)] if QUICK else [("rmat1", rmat1),
+                                           ("rmat2", rmat2)]
+if QUICK:
+    roots = ["delta:5", "kla:2", "dijkstra", "chaotic"]
+    variants = ["buffer", "threadq"]
+else:
+    roots = ["delta:3", "delta:5", "delta:7", "kla:1", "kla:2", "kla:3",
+             "chaotic", "dijkstra"]
+    variants = ["buffer", "threadq", "nodeq", "numaq"]
+for gname, gen in graphs:
     g = gen(SCALE, seed=7)
     ref = dijkstra_reference(g, 0)
-    for root in ["delta:3", "delta:5", "delta:7", "kla:1", "kla:2",
-                 "kla:3", "chaotic"]:
-        for variant in ["buffer", "threadq", "nodeq", "numaq"]:
-            solver = Solver(
-                SolverConfig(root=root, variant=variant, exchange="a2a",
-                             chunk_size=256),
-                mesh=mesh)
-            sol = solver.solve(Problem(g, SingleSource(0)))
-            m = sol.metrics
-            ok = np.allclose(np.where(np.isinf(ref), -1, ref),
-                             np.where(np.isinf(sol.state), -1, sol.state))
-            rows.append(dict(
-                graph=gname, scale=SCALE, root=root, variant=variant,
-                ok=bool(ok), model_ms=model_time_s(m, 256) * 1e3,
-                **m.as_dict()))
+    for root in roots:
+        for variant in variants:
+            for exchange in %(exchanges)s:
+                solver = Solver(
+                    SolverConfig(root=root, variant=variant,
+                                 exchange=exchange, chunk_size=256,
+                                 frontier_cap=%(frontier_cap)s),
+                    mesh=mesh)
+                prob = Problem(g, SingleSource(0))
+                sol = solver.solve(prob)          # compile + warm
+                t0 = time.perf_counter()
+                sol = solver.solve(prob)
+                wall_s = time.perf_counter() - t0
+                m = sol.metrics
+                ok = np.allclose(np.where(np.isinf(ref), -1, ref),
+                                 np.where(np.isinf(sol.state), -1,
+                                          sol.state))
+                rows.append(dict(
+                    graph=gname, scale=SCALE, root=root, variant=variant,
+                    exchange=exchange, ok=bool(ok), wall_s=wall_s,
+                    model_ms=model_time_s(m, 256) * 1e3,
+                    bytes_per_superstep=(
+                        m.exchange_bytes / max(1, m.supersteps)),
+                    **m.as_dict()))
 print(json.dumps(rows))
 """
 
 
-def run(scale: int = 10) -> list:
+def run(
+    scale: int = 10,
+    quick: bool = False,
+    exchanges=None,
+    frontier_cap: int | None = 4,
+) -> list:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = "src"
+    child = CHILD % {
+        "scale": scale,
+        "quick": int(quick),
+        "exchanges": repr(exchanges or EXCHANGES),
+        "frontier_cap": repr(frontier_cap),
+    }
     r = subprocess.run(
-        [sys.executable, "-c", CHILD % {"scale": scale}], env=env,
+        [sys.executable, "-c", child], env=env,
         capture_output=True, text=True, timeout=3000,
     )
     if r.returncode != 0:
@@ -61,20 +104,42 @@ def run(scale: int = 10) -> list:
     return json.loads(r.stdout.splitlines()[-1])
 
 
-def main(scale: int = 10) -> list[str]:
-    rows = run(scale)
+def main(
+    scale: int = 10,
+    quick: bool = False,
+    json_path: str | None = None,
+) -> list[str]:
+    rows = run(scale, quick=quick)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
     out = []
     for r in rows:
         assert r["ok"], r
-        name = f"fig5-7/{r['graph']}_s{r['scale']}/{r['root']}+{r['variant']}"
+        name = (
+            f"fig5-7/{r['graph']}_s{r['scale']}/"
+            f"{r['root']}+{r['variant']}/{r['exchange']}"
+        )
         derived = (
             f"relax={r['relaxations']};steps={r['supersteps']};"
-            f"commits={r['commits']};xbytes={r['exchange_bytes']}"
+            f"commits={r['commits']};xbytes={r['exchange_bytes']};"
+            f"bps={r['bytes_per_superstep']:.0f};"
+            f"fallbacks={r['sparse_fallbacks']}"
         )
-        out.append(f"{name},{r['model_ms']*1e3:.1f},{derived}")
+        out.append(f"{name},{r['wall_s']*1e6:.1f},{derived}")
     return out
 
 
 if __name__ == "__main__":
-    for line in main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid + scale 9 (CI trajectory job)")
+    ap.add_argument("--scale", type=int, default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the raw rows as JSON")
+    a = ap.parse_args()
+    scale = a.scale if a.scale is not None else (9 if a.quick else 10)
+    for line in main(scale, quick=a.quick, json_path=a.json):
         print(line)

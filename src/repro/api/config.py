@@ -8,21 +8,25 @@ string specs.  The compact spec grammar is
     root[+variant][/exchange]     e.g.  "delta:5+threadq/a2a"
 
 with root ∈ {chaotic, dijkstra, delta:Δ, kla:K}, variant ∈ {buffer,
-threadq, nodeq, numaq} and exchange ∈ {a2a, pmin} — exactly the
-paper's Figure-4 family grid, one string per family member.
+threadq, nodeq, numaq} and exchange ∈ {a2a, pmin, sparse, auto} — the
+paper's Figure-4 family grid plus the frontier-sparse execution modes
+(``/sparse``: O(frontier) compaction + (idx, val) all_to_all with a
+dense fallback on capacity overflow; ``/auto``: sparse only while the
+carried pending count is small).  ``frontier_cap`` bounds the
+per-device compacted frontier (None = rows/8).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Optional, Union
 
 from repro.core.eagm import EAGMPolicy, VARIANT_LEVEL, make_policy
-from repro.core.engine import EngineConfig
+from repro.core.engine import EXCHANGE_MODES, EngineConfig
 from repro.core.ordering import make_ordering
 from repro.core.processing import ProcessingFn
 
-EXCHANGES = ("a2a", "pmin")
+EXCHANGES = EXCHANGE_MODES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +37,8 @@ class SolverConfig:
     chunk_size: int = 1024         # B for chunk-level (threadq) draining
     max_iters: int = 10**9
     collect_metrics: bool = True
+    frontier_cap: Optional[int] = None  # sparse-path row capacity F
+    relax_impl: str = "ref"        # sparse relax backend ('ref'|'pallas')
 
     def __post_init__(self):
         make_ordering(self.root)  # raises on a bad ordering spec
@@ -49,6 +55,15 @@ class SolverConfig:
             raise ValueError(f"chunk_size must be positive: {self.chunk_size}")
         if self.max_iters <= 0:
             raise ValueError(f"max_iters must be positive: {self.max_iters}")
+        if self.frontier_cap is not None and self.frontier_cap <= 0:
+            raise ValueError(
+                f"frontier_cap must be positive: {self.frontier_cap}"
+            )
+        if self.relax_impl not in ("ref", "pallas", "pallas_interpret"):
+            raise ValueError(
+                f"relax_impl must be 'ref', 'pallas' or 'pallas_interpret',"
+                f" got {self.relax_impl!r}"
+            )
 
     @classmethod
     def from_spec(cls, spec: str, **overrides) -> "SolverConfig":
@@ -78,6 +93,8 @@ class SolverConfig:
             exchange=self.exchange,
             max_iters=self.max_iters,
             collect_metrics=self.collect_metrics,
+            frontier_cap=self.frontier_cap,
+            relax_impl=self.relax_impl,
         )
 
 

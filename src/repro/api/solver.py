@@ -45,7 +45,9 @@ from repro.core.engine import (
     initial_state_batch,
     make_engine,
 )
+from repro.core.frontier import frontier_caps
 from repro.core.metrics import WorkMetrics
+from repro.core.ordering import needs_level
 from repro.core.processing import ProcessingFn
 from repro.graph.formats import Graph
 from repro.graph.partition import PartitionedGraph, partition_1d
@@ -104,23 +106,71 @@ def compiled_engine(
 
 
 def _finish_metrics(
-    pg: PartitionedGraph, ecfg: EngineConfig, it, commits, relax, classes
+    pg: PartitionedGraph,
+    ecfg: EngineConfig,
+    it,
+    commits,
+    relax,
+    classes,
+    active=None,
+    fallbacks=0,
 ) -> WorkMetrics:
     it = int(it)
+    fallbacks = int(fallbacks)
+    converged = True if active is None else int(active) == 0
     m = WorkMetrics(
         classes=int(classes),
         commits=int(commits),
         relaxations=int(relax),
         supersteps=it,
         workitems=int(commits),
+        converged=converged,
+        sparse_fallbacks=fallbacks,
     )
-    # analytic exchange-byte accounting (per device, summed over devices)
-    bytes_per_iter_per_dev = (
-        pg.n_pad * 4 * (2 if ecfg.exchange == "pmin" else 1)
-        * (pg.n_parts - 1) // max(1, pg.n_parts)
+    # Exact exchange-byte accounting, in Python ints (the engine moves
+    # a statically known word count per superstep and branch, so
+    # (supersteps, dense-exchange-step count) reconstructs the total
+    # without any overflow-prone on-device accumulator).  Per device
+    # per superstep:
+    #   a2a   (P-1)·n_local·planes words — the reduce-scatter sends
+    #         (P-1)/P of the n_pad candidate array (+ KLA levels).
+    #         NOTE the seed's formula multiplied before its integer
+    #         division (`n_pad * 4 * (P-1) // P`), which is nonzero for
+    #         P > 1 but obscured the per-rank intent; this form is
+    #         explicit.
+    #   pmin  2x a2a — a full-array ring all-reduce per combine.
+    #   sparse (P-1)·K·S words on sparse supersteps, dense a2a words on
+    #         the `fallbacks` dense ones.
+    use_level = needs_level(ecfg.policy.root)
+    nplanes = 2 if use_level else 1
+    P_, nl = pg.n_parts, pg.n_local
+    dense_words = (P_ - 1) * nl * nplanes
+    if ecfg.exchange == "pmin":
+        words = it * 2 * dense_words
+    elif ecfg.exchange == "a2a":
+        words = it * dense_words
+    else:
+        _, slot_cap = frontier_caps(
+            pg.rows_per_rank, pg.width, nl, P_, ecfg.frontier_cap
+        )
+        sparse_words = (P_ - 1) * (nplanes + 1) * slot_cap
+        words = (it - fallbacks) * sparse_words + fallbacks * dense_words
+    m.exchange_bytes = words * 4 * P_
+    m.collective_rounds = it * (
+        (3 if ecfg.collect_metrics else 2)
+        + (1 if ecfg.exchange in ("sparse", "auto") else 0)
     )
-    m.exchange_bytes = it * bytes_per_iter_per_dev * pg.n_parts
-    m.collective_rounds = it * (3 if ecfg.collect_metrics else 2)
+    if not converged:
+        import warnings
+
+        warnings.warn(
+            f"engine hit max_iters={ecfg.max_iters} with {int(active)} "
+            "pending workitems left — the returned state is truncated "
+            "(monotone but not yet the fixpoint); raise max_iters or "
+            "check Solution.metrics.converged",
+            RuntimeWarning,
+            stacklevel=3,
+        )
     return m
 
 
@@ -131,10 +181,12 @@ def solve_with_engine_config(
     shares the facade's engine cache."""
     fn = compiled_engine(mesh, ecfg, pg.n_parts, pg.n_local)
     D0, T0, L0 = initial_state(pg, ecfg.processing, sources)
-    D, it, commits, relax, classes = fn(
+    D, it, commits, relax, classes, active, fallbacks = fn(
         pg.row_src, pg.col, pg.wgt, D0, T0, L0
     )
-    m = _finish_metrics(pg, ecfg, it, commits, relax, classes)
+    m = _finish_metrics(
+        pg, ecfg, it, commits, relax, classes, active, fallbacks
+    )
     return np.asarray(D).reshape(-1)[: pg.n], m
 
 
@@ -223,10 +275,8 @@ class Solver:
         ecfg = self.config.engine_config(p)
         fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
         D0, T0, L0 = initial_state(pg, p, problem.source_items())
-        D, it, commits, relax, classes = fn(
-            pg.row_src, pg.col, pg.wgt, D0, T0, L0
-        )
-        return self._pack(problem, pg, ecfg, D, it, commits, relax, classes)
+        out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
+        return self._pack(problem, pg, ecfg, *out)
 
     def solve_batch(self, problems: Sequence[Problem]) -> list[Solution]:
         """Solve B same-shaped queries in one engine invocation: state
@@ -256,16 +306,12 @@ class Solver:
         D0, T0, L0 = initial_state_batch(
             pg, p, [q.source_items() for q in problems]
         )
-        D, it, commits, relax, classes = fn(
-            pg.row_src, pg.col, pg.wgt, D0, T0, L0
-        )
+        D, *rest = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
         D = np.asarray(D)  # (P, B, n_local)
-        it, commits = np.asarray(it), np.asarray(commits)
-        relax, classes = np.asarray(relax), np.asarray(classes)
+        rest = [np.asarray(r) for r in rest]  # each (B,)
         return [
             self._pack(
-                problems[b], pg, ecfg, D[:, b],
-                it[b], commits[b], relax[b], classes[b],
+                problems[b], pg, ecfg, D[:, b], *(r[b] for r in rest)
             )
             for b in range(B)
         ]
@@ -334,10 +380,8 @@ class Solver:
         ).astype(np.float32)
 
         fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
-        D, it, commits, relax, classes = fn(
-            pg.row_src, pg.col, pg.wgt, D0, T0, L0
-        )
-        sol = self._pack(problem, pg, ecfg, D, it, commits, relax, classes)
+        out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
+        sol = self._pack(problem, pg, ecfg, *out)
         # account for the bootstrap sweep: one superstep's worth of
         # full-graph relaxation done host-side
         sol.metrics.relaxations += pg.m
@@ -347,10 +391,13 @@ class Solver:
     # -- internals -----------------------------------------------------
 
     def _pack(
-        self, problem, pg, ecfg, D, it, commits, relax, classes
+        self, problem, pg, ecfg, D, it, commits, relax, classes,
+        active=None, fallbacks=0,
     ) -> Solution:
         padded = np.asarray(D).reshape(pg.n_parts, pg.n_local)
-        m = _finish_metrics(pg, ecfg, it, commits, relax, classes)
+        m = _finish_metrics(
+            pg, ecfg, it, commits, relax, classes, active, fallbacks
+        )
         return Solution(
             state=padded.reshape(-1)[: pg.n],
             metrics=m,

@@ -5,6 +5,7 @@ Layers:
   processing.py  processing functions π (SSSP/BFS/CC/SSWP)
   agm.py         Definition-3 AGM + logical (oracle) engine
   eagm.py        spatial hierarchies (buffer/threadq/nodeq/numaq)
+  frontier.py    O(frontier) compaction + sparse candidate exchange
   engine.py      distributed shard_map engine (the TPU realization)
   metrics.py     work/sync metrics + calibrated cost model
 """
@@ -26,12 +27,19 @@ from repro.core.eagm import (
     paper_variant_specs,
 )
 from repro.core.engine import (
+    EXCHANGE_MODES,
     EngineConfig,
     run_distributed,
     make_engine,
     initial_state,
     sssp_sources,
     cc_sources,
+)
+from repro.core.frontier import (
+    compact_rows,
+    frontier_caps,
+    sparse_payload,
+    unpack_combine,
 )
 from repro.core.metrics import WorkMetrics, model_time_s
 
@@ -41,6 +49,8 @@ __all__ = [
     "AGM", "sssp_agm", "run_logical", "dijkstra_reference",
     "EAGMPolicy", "make_policy", "paper_variant_grid",
     "paper_variant_specs",
-    "EngineConfig", "run_distributed", "make_engine", "initial_state",
-    "sssp_sources", "cc_sources", "WorkMetrics", "model_time_s",
+    "EXCHANGE_MODES", "EngineConfig", "run_distributed", "make_engine",
+    "initial_state", "sssp_sources", "cc_sources",
+    "compact_rows", "frontier_caps", "sparse_payload", "unpack_combine",
+    "WorkMetrics", "model_time_s",
 ]

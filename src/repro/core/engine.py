@@ -28,6 +28,26 @@ One loop iteration = one superstep:
      full-|V| receive buffer) — the beyond-paper §Perf variant,
   6. fold into T, count pending via psum ⇒ termination detection
      (active-work count, paper §II).
+
+Frontier-sparse path (``exchange='sparse'`` / ``'auto'``): instead of
+relaxing all R rows and moving O(|V|) floats, the eligible rows are
+compacted into a fixed-capacity index list (cap F, the
+``frontier_cap`` knob; see core/frontier.py) and only those rows are
+gathered and relaxed (push mode — the Pallas realization is
+kernels/relax_push); candidates are slotted into per-destination-rank
+(idx, val) buffers of capacity S ≈ F·W/P and moved with ONE
+``all_to_all`` — per-superstep communication scales with the frontier
+capacity, not |V|.  Overflow of either capacity falls back to the
+dense path *for that superstep only* (the fallback decision is made
+globally uniform with a pmin so every rank takes the same collective
+branch); ``'auto'`` additionally prefers the dense exchange while the
+carried global pending count is large.  Both paths produce bit-
+identical candidate buffers, so results match the dense engine
+exactly.  The carry threads the dense-exchange superstep count out to
+:class:`repro.core.metrics.WorkMetrics` (each branch moves a
+statically known word count per superstep, so the facade reconstructs
+exact exchange bytes host-side in Python ints), plus the final active
+count for convergence/truncation detection.
 """
 
 from __future__ import annotations
@@ -42,6 +62,12 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.frontier import (
+    compact_rows,
+    frontier_caps,
+    sparse_payload,
+    unpack_combine,
+)
 from repro.core.eagm import EAGMPolicy
 from repro.core.metrics import WorkMetrics
 from repro.core.ordering import needs_level
@@ -51,17 +77,39 @@ from repro.graph.partition import PartitionedGraph
 INF = jnp.float32(jnp.inf)
 
 
+#: valid candidate-exchange strategies:
+#:   'a2a'    dense all_to_all transpose + local combine (reduce-scatter)
+#:   'pmin'   dense all-reduce combine (the paper-faithful baseline)
+#:   'sparse' frontier-compacted (idx, val) exchange, dense fallback on
+#:            capacity overflow
+#:   'auto'   'sparse' while the carried pending count is small, dense
+#:            otherwise
+EXCHANGE_MODES = ("a2a", "pmin", "sparse", "auto")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     policy: EAGMPolicy
     processing: ProcessingFn = SSSP
-    exchange: str = "a2a"  # 'a2a' (reduce-scatter-min) | 'pmin' (baseline)
+    exchange: str = "a2a"
     max_iters: int = 10**9
     collect_metrics: bool = True
+    # max eligible virtual rows compacted per device per superstep on
+    # the sparse path (None = rows/8); exchange slot capacity derives
+    # from it (frontier.frontier_caps)
+    frontier_cap: Optional[int] = None
+    # relaxation backend for the sparse push path: 'ref' (inline jnp,
+    # the default — XLA fuses it fine) | 'pallas' | 'pallas_interpret'
+    # (kernels/relax_push; min-plus processing only, others stay 'ref')
+    relax_impl: str = "ref"
 
     def __post_init__(self):
-        if self.exchange not in ("a2a", "pmin"):
+        if self.exchange not in EXCHANGE_MODES:
             raise ValueError(self.exchange)
+        if self.frontier_cap is not None and self.frontier_cap <= 0:
+            raise ValueError(f"frontier_cap must be positive: {self.frontier_cap}")
+        if self.relax_impl not in ("ref", "pallas", "pallas_interpret"):
+            raise ValueError(self.relax_impl)
 
 
 def _flat_rank(axis_names, mesh_shape):
@@ -92,6 +140,11 @@ def build_step(
     n_pad = n_parts * n_local
     all_axes = axis_names
     pod_axes = _ranks_within_pod(axis_names)
+    sparse_mode = cfg.exchange in ("sparse", "auto")
+    # f32 planes moved by the dense exchange (values [+ KLA levels]) and
+    # by the sparse payload (values, bitcast indices [+ levels])
+    nplanes = 2 if use_level else 1
+    kplanes = 3 if use_level else 2
 
     def scatter_reduce(col, vals, size):
         """Dense scatter-combine of edge candidates into a (size+1,)
@@ -111,8 +164,20 @@ def build_step(
         return jax.lax.pmin(x, axes) if is_min else jax.lax.pmax(x, axes)
 
     def step(row_src, col, wgt, carry):
-        D, T, L, it, active, commits, relax, classes, last_key = carry
-        del active
+        (D, T, L, it, active, commits, relax, classes, last_key,
+         fallbacks) = carry
+        active_prev = active
+        R, W = col.shape
+        if sparse_mode:
+            row_cap, slot_cap = frontier_caps(
+                R, W, n_local, n_parts, cfg.frontier_cap
+            )
+            # 'auto' heuristic: the carried pending count (an
+            # overestimate of the next eligible class) gates sparse —
+            # with more than half the graph pending the frontier is
+            # dense by definition; below that, try sparse and let the
+            # capacity-overflow veto catch the bursty supersteps
+            auto_thresh = max(1, (n_parts * n_local) // 2)
 
         # ---- 1. root ordering: current global minimal class ----------
         pending = p.better(T, D)
@@ -137,45 +202,108 @@ def build_step(
         D = jnp.where(eligible, T, D)
 
         # ---- 4. relax out-edges of eligible vertices (ELL) ------------
-        if is_min:
-            # §Perf(S2): semiring-implicit masking — mask at the
-            # (n_local,) vertex level and let +inf padding annihilate
-            # padded slots (inf + w = inf = identity of min).  Avoids
-            # materializing two (R, W) mask/select buffers per step.
-            Dm = jnp.where(eligible, D, worst)  # (n_local+1,)
-            src_val = Dm[row_src]               # (R,)
-            cand = jnp.broadcast_to(
-                p.edge_update(src_val[:, None], wgt), wgt.shape
-            )  # (R, W); CC's update ignores wgt -> explicit broadcast.
-            # Padded ELL slots always carry col == n_pad, so they land
-            # in the discarded dummy scatter slot for ANY semiring.
-        else:
-            src_on = eligible[row_src]
-            src_val = jnp.where(src_on, D[row_src], worst)
-            cand = p.edge_update(src_val[:, None], wgt)
-            cand = jnp.where(src_on[:, None] & (wgt < INF), cand, worst)
+        def level_scatter(cols, cands, lvl_cands, C):
+            """Second scatter: min level among candidates matching the
+            winning value (deterministic tie-break)."""
+            win = (
+                (lvl_cands < INF)
+                & (cands == C[jnp.clip(cols, 0, n_pad - 1)])
+                & (cols < n_pad)
+            )
+            buf = jnp.full((n_pad + 1,), INF, dtype=jnp.float32)
+            return buf.at[cols.reshape(-1)].min(
+                jnp.where(win, lvl_cands, INF).reshape(-1)
+            )[:n_pad]
 
-        C = scatter_reduce(col, cand, n_pad)[:n_pad]
-
-        if use_level:
+        def relax_dense(_):
+            """Pull sweep over all R virtual rows (masked)."""
+            if is_min:
+                # §Perf(S2): semiring-implicit masking — mask at the
+                # (n_local,) vertex level and let +inf padding
+                # annihilate padded slots (inf + w = inf = identity of
+                # min).  Avoids materializing two (R, W) mask/select
+                # buffers per step.
+                Dm = jnp.where(eligible, D, worst)  # (n_local+1,)
+                src_val = Dm[row_src]               # (R,)
+                cand = jnp.broadcast_to(
+                    p.edge_update(src_val[:, None], wgt), wgt.shape
+                )  # (R, W); CC's update ignores wgt -> explicit bcast.
+                # Padded ELL slots always carry col == n_pad, so they
+                # land in the discarded dummy scatter slot for ANY
+                # semiring.
+            else:
+                src_on = eligible[row_src]
+                src_val = jnp.where(src_on, D[row_src], worst)
+                cand = p.edge_update(src_val[:, None], wgt)
+                cand = jnp.where(src_on[:, None] & (wgt < INF), cand, worst)
+            C = scatter_reduce(col, cand, n_pad)[:n_pad]
+            if not use_level:
+                return C, jnp.zeros_like(C)
             live = eligible[row_src][:, None] & (wgt < INF)
             lvl_cand = jnp.where(live, (L[row_src] + 1.0)[:, None], INF)
-            # second scatter: min level among candidates matching the
-            # winning value (deterministic tie-break)
-            win = live & (cand == C[jnp.clip(col, 0, n_pad - 1)]) & (
-                col < n_pad
-            )
-            CL = jnp.full((n_pad + 1,), INF, dtype=jnp.float32)
-            CL = CL.at[col.reshape(-1)].min(
-                jnp.where(win, lvl_cand, INF).reshape(-1)
-            )[:n_pad]
+            return C, level_scatter(col, cand, lvl_cand, C)
+
+        if sparse_mode:
+            elig_rows = eligible[row_src]
+            f_idx, f_cnt, row_overflow = compact_rows(elig_rows, row_cap)
+
+            def relax_push(_):
+                """Push mode: gather only the F eligible virtual rows
+                (kernels/relax_push is the TPU realization of the
+                gather half); filled slots carry col == n_pad and
+                annihilate in the scatter."""
+                colg = jnp.take(
+                    col, f_idx, axis=0, mode="fill", fill_value=n_pad
+                )
+                if cfg.relax_impl != "ref" and p.name == "sssp" \
+                        and not use_level:
+                    from repro.kernels.relax_push import relax_push_gather
+
+                    cand = relax_push_gather(
+                        D, f_idx, f_cnt, row_src, col, wgt,
+                        interpret=(cfg.relax_impl == "pallas_interpret"),
+                    )
+                    return scatter_reduce(colg, cand, n_pad)[:n_pad], \
+                        jnp.zeros((n_pad,), jnp.float32)
+                srcg = jnp.take(
+                    row_src, f_idx, mode="fill", fill_value=n_local
+                )
+                wgtg = jnp.take(
+                    wgt, f_idx, axis=0, mode="fill", fill_value=jnp.inf
+                )
+                # every gathered row is eligible (filled rows point at
+                # the dummy vertex, whose state is `worst`), so no
+                # eligibility masking is needed in push mode
+                cand = jnp.broadcast_to(
+                    p.edge_update(D[srcg][:, None], wgtg), wgtg.shape
+                )
+                C = scatter_reduce(colg, cand, n_pad)[:n_pad]
+                if not use_level:
+                    return C, jnp.zeros_like(C)
+                lvl_cand = jnp.where(
+                    wgtg < INF, (L[srcg] + 1.0)[:, None], INF
+                )
+                return C, level_scatter(colg, cand, lvl_cand, C)
+
+            # local decision, collective-free branches: a device whose
+            # frontier overflows F sweeps densely on its own
+            C, CL = jax.lax.cond(row_overflow, relax_dense, relax_push, None)
         else:
-            CL = None
+            C, CL = relax_dense(None)
 
         # ---- 5. exchange candidates to owner devices ------------------
-        if cfg.exchange == "pmin":
+        # Each exchange returns (mine, mineL): the combined (n_local,)
+        # candidates for my owned vertices and their levels (zeros when
+        # unused).  Words moved are NOT carried on-device: each branch
+        # moves a statically known word count per superstep, so the
+        # facade reconstructs exact exchange bytes in Python ints from
+        # (supersteps, dense-exchange-step count) — no int32 overflow
+        # on long solves (see api.solver._finish_metrics).
+
+        def exchange_pmin(_):
             # paper-faithful dense exchange: all-reduce-combine of the
-            # full |V| candidate array ("send every update to the owner")
+            # full |V| candidate array ("send every update to the
+            # owner"); ring all-reduce moves ~2(P-1)/P of the array
             Cg = pextreme(C, all_axes)
             me = _flat_rank(axis_names, mesh_shape)
             mine = jax.lax.dynamic_slice(Cg, (me * n_local,), (n_local,))
@@ -185,7 +313,11 @@ def build_step(
                 mineL = jax.lax.dynamic_slice(
                     CLg, (me * n_local,), (n_local,)
                 )
-        else:
+            else:
+                mineL = jnp.zeros_like(mine)
+            return mine, mineL
+
+        def exchange_a2a(_):
             # optimized: all_to_all transpose + local combine
             # (= reduce-scatter with a min/max combiner)
             C2 = C.reshape(n_parts, n_local)
@@ -199,6 +331,50 @@ def build_step(
                     L2, all_axes, split_axis=0, concat_axis=0, tiled=True
                 )
                 mineL = jnp.min(jnp.where(X == mine[None, :], XL, INF), 0)
+            else:
+                mineL = jnp.zeros_like(mine)
+            return mine, mineL
+
+        if cfg.exchange == "pmin":
+            mine, mineL = exchange_pmin(None)
+        elif cfg.exchange == "a2a":
+            mine, mineL = exchange_a2a(None)
+        elif cfg.exchange == "auto" and kplanes * slot_cap >= nplanes * n_local:
+            # static shortcut: at these capacities the sparse payload
+            # can never move fewer words than the dense reduce-scatter
+            # (K·S ≥ planes·n_local), so 'auto' resolves to dense at
+            # trace time — no compaction, no decision collective
+            mine, mineL = exchange_a2a(None)
+            fallbacks = fallbacks + 1
+        else:  # 'sparse' | 'auto'
+            extra = [(CL, INF)] if use_level else []
+            payload, ex_overflow = sparse_payload(
+                C, extra, n_parts, slot_cap, worst
+            )
+            ok = jnp.logical_not(ex_overflow)
+            if cfg.exchange == "auto":
+                ok = ok & (active_prev <= jnp.int32(auto_thresh))
+            # the all_to_all shapes differ between branches, so every
+            # rank must take the same one: agree globally (pmin of the
+            # local votes — a rank whose buckets overflow vetoes)
+            use_sp = jax.lax.pmin(jnp.where(ok, 1, 0), all_axes) > 0
+
+            def exchange_sparse(_):
+                recv = jax.lax.all_to_all(
+                    payload, all_axes, split_axis=0, concat_axis=0,
+                    tiled=True,
+                )
+                mine, mineL = unpack_combine(
+                    recv, n_local, slot_cap, is_min, worst, use_level
+                )
+                if mineL is None:
+                    mineL = jnp.zeros_like(mine)
+                return mine, mineL
+
+            mine, mineL = jax.lax.cond(
+                use_sp, exchange_sparse, exchange_a2a, None
+            )
+            fallbacks = fallbacks + jnp.where(use_sp, 0, 1)
 
         # ---- 6. fold into pending state T ------------------------------
         mine_ext = jnp.concatenate([mine, jnp.array([worst])])
@@ -226,7 +402,8 @@ def build_step(
             jnp.sum(pending_new.astype(jnp.int32)), all_axes
         )
 
-        return (D, T, L, it + 1, active, commits, relax, classes, kmin)
+        return (D, T, L, it + 1, active, commits, relax, classes, kmin,
+                fallbacks)
 
     def cond(carry):
         it, active = carry[3], carry[4]
@@ -238,11 +415,18 @@ def build_step(
             jnp.int32(0), jnp.int32(1),
             jnp.int32(0), jnp.int32(0), jnp.int32(0),
             jnp.float32(jnp.nan),
+            jnp.int32(0),
         )
         body = functools.partial(step, row_src, col, wgt)
         carry = jax.lax.while_loop(cond, lambda c: body(c), carry)
-        D, T, L, it, active, commits, relax, classes, _ = carry
-        return D[:n_local], it, commits, relax, classes
+        (D, T, L, it, active, commits, relax, classes, _,
+         fallbacks) = carry
+        # `active` == 0 iff the loop converged (vs. truncation at
+        # max_iters); `fallbacks` = supersteps on which a
+        # sparse-capable mode used the dense exchange (capacity
+        # overflow, the auto pending heuristic, or the static
+        # can't-pay shortcut).
+        return D[:n_local], it, commits, relax, classes, active, fallbacks
 
     return loop
 
@@ -281,26 +465,22 @@ def make_engine(
     if batch is None:
         def local(row_src, col, wgt, D, T, L):
             # shard_map hands each device a leading axis of size 1
-            Dn, it, commits, relax, classes = loop(
-                row_src[0], col[0], wgt[0], D[0], T[0], L[0]
-            )
-            return Dn[None], it, commits, relax, classes
+            out = loop(row_src[0], col[0], wgt[0], D[0], T[0], L[0])
+            return (out[0][None],) + out[1:]
     else:
         vloop = jax.vmap(loop, in_axes=(None, None, None, 0, 0, 0))
 
         def local(row_src, col, wgt, D, T, L):
             # D/T/L local slices are (1, B, n_local+1)
-            Dn, it, commits, relax, classes = vloop(
-                row_src[0], col[0], wgt[0], D[0], T[0], L[0]
-            )
-            return Dn[None], it, commits, relax, classes
+            out = vloop(row_src[0], col[0], wgt[0], D[0], T[0], L[0])
+            return (out[0][None],) + out[1:]
 
     shard = P(axis_names)  # leading axis split over the whole mesh
     sharded = shard_map(
         local,
         mesh=mesh,
         in_specs=(shard, shard, shard, shard, shard, shard),
-        out_specs=(shard, P(), P(), P(), P()),
+        out_specs=(shard,) + (P(),) * 6,
     )
 
     @jax.jit
@@ -318,8 +498,11 @@ def initial_state(
     """Dense initial state from the initial workitem set S.
 
     ``sources`` — [(vertex, state, level)].  D = worst everywhere,
-    T[v] = s for each initial workitem.  Shapes (P, n_local+1); the
-    trailing slot per device is the dummy target of padded virtual
+    T[v] = the `processing.reduce`-combine of all initial workitems
+    targeting v (duplicates keep the best state, not the last written
+    one — matters for SSWP's max-reduce and multi-source sets with
+    repeats); ties keep the smallest level.  Shapes (P, n_local+1);
+    the trailing slot per device is the dummy target of padded virtual
     rows and stays at `worst` forever.
     """
     P_, nl = pg.n_parts, pg.n_local
@@ -328,8 +511,13 @@ def initial_state(
     T = np.full((P_, nl + 1), worst, dtype=np.float32)
     L = np.full((P_, nl + 1), np.inf, dtype=np.float32)
     for (v, s, lvl) in sources:
-        T[v // nl, v % nl] = s
-        L[v // nl, v % nl] = lvl
+        i, j = divmod(int(v), nl)
+        s, lvl = np.float32(s), np.float32(lvl)
+        if bool(processing.better(s, T[i, j])):
+            T[i, j] = s
+            L[i, j] = lvl
+        elif s == T[i, j]:
+            L[i, j] = min(L[i, j], lvl)
     return D, T, L
 
 

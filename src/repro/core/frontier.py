@@ -1,0 +1,175 @@
+"""Frontier compaction + sparse candidate exchange (O(frontier) supersteps).
+
+The dense engine relaxes all R ELL rows and exchanges O(|V|) candidate
+floats per superstep no matter how small the eligible class is — so the
+paper's finer orderings (arXiv:1706.05760 §IV) shrink *work* but not
+*communication*.  The AGM's workitem sets (arXiv:1604.04772) are
+exactly the sparse structure this module recovers, under the TPU
+constraint that every shape is static:
+
+* :func:`compact_rows` — ``jnp.where``-style compaction of the eligible
+  virtual-row mask into a fixed-capacity index list (cap F, overflow
+  flag for the dense fallback),
+* :func:`bucket_slots` / :func:`scatter_plane` — per-destination-rank
+  slotting of the candidate buffer into fixed-capacity (idx, val)
+  buffers,
+* :func:`sparse_payload` / :func:`unpack_combine` — the (P, K·S)
+  payload moved by one ``all_to_all`` (values, bitcast int32 indices
+  and, for KLA, levels as f32 planes) and the owner-side
+  scatter-combine back into a dense per-vertex array.
+
+Everything here is collective-free local compute; the engine supplies
+the ``all_to_all`` and the global (uniform-across-ranks) fallback
+decision.  Capacities are static Python ints fixed at trace time —
+:func:`frontier_caps` derives them from the partition shape and the
+``frontier_cap`` knob.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def frontier_caps(
+    rows: int,
+    width: int,
+    n_local: int,
+    n_parts: int,
+    frontier_cap: int | None = None,
+) -> tuple[int, int]:
+    """Static (row_cap, slot_cap) for the sparse path.
+
+    ``row_cap`` — max eligible virtual rows compacted per device per
+    superstep (the knob F; default R/8).  ``slot_cap`` — per-destination
+    -rank candidate slots in the sparse exchange, sized so a row_cap
+    frontier's candidates spread evenly over ranks fit.  The ELL width
+    is ~2x the average degree (graph.partition.default_ell_width), so
+    half of F·W is padding by construction and slots are provisioned
+    for F·W/(2P); skewed destinations (or denser-than-average
+    frontiers) overflow into the dense fallback for that superstep
+    instead of corrupting anything.
+    """
+    if frontier_cap is None:
+        row_cap = max(8, rows // 8)
+    else:
+        row_cap = max(1, int(frontier_cap))
+    row_cap = min(rows, row_cap)
+    # beyond n_local/2 slots the (idx, val) payload can never move
+    # fewer words than the dense reduce-scatter, so cap there and let
+    # overflow fall back instead
+    slot_cap = max(
+        1,
+        min(n_local // 2, (row_cap * width) // (2 * max(1, n_parts))),
+    )
+    return row_cap, slot_cap
+
+
+def compact_rows(mask: jax.Array, cap: int):
+    """Compact a (R,) bool mask into a capacity-``cap`` index list.
+
+    Returns ``(idx, count, overflow)``: ``idx`` (cap,) int32 holds the
+    first ``cap`` set positions in order, padded with the sentinel R
+    (one past the last row — gathers fill through it); ``count`` the
+    true population; ``overflow`` True iff the mask doesn't fit.
+    """
+    R = mask.shape[0]
+    (idx,) = jnp.nonzero(mask, size=cap, fill_value=R)
+    count = jnp.sum(mask.astype(jnp.int32))
+    return idx.astype(jnp.int32), count, count > jnp.int32(cap)
+
+
+def bucket_slots(mask2d: jax.Array, slot_cap: int):
+    """Per-destination slot assignment for candidate compaction.
+
+    ``mask2d`` (P, n_local) marks real candidates per destination rank.
+    Returns ``(slot, overflow)``: ``slot`` (P, n_local) int32 gives each
+    candidate its position within destination p's buffer (``slot_cap``
+    for non-candidates and overflow spill — a dropped slot); ``overflow``
+    True iff some destination holds more than ``slot_cap`` candidates.
+    """
+    pos = jnp.cumsum(mask2d.astype(jnp.int32), axis=1) - 1
+    overflow = jnp.max(pos[:, -1]) + 1 > jnp.int32(slot_cap)
+    slot = jnp.where(mask2d & (pos < slot_cap), pos, slot_cap)
+    return slot, overflow
+
+
+def scatter_plane(vals2d: jax.Array, slot: jax.Array, slot_cap: int, fill):
+    """Scatter (P, n_local) values into their (P, slot_cap) buffer
+    positions; slot ``slot_cap`` is a discarded spill column."""
+    Pn = vals2d.shape[0]
+    rows = jnp.broadcast_to(
+        jnp.arange(Pn, dtype=jnp.int32)[:, None], vals2d.shape
+    )
+    buf = jnp.full((Pn, slot_cap + 1), fill, vals2d.dtype)
+    return buf.at[rows, slot].set(vals2d, mode="drop")[:, :slot_cap]
+
+
+def sparse_payload(
+    C: jax.Array,
+    extra_planes,
+    n_parts: int,
+    slot_cap: int,
+    worst,
+):
+    """Build the (P, K·S) all_to_all payload from the (n_pad,) local
+    candidate buffer ``C``.
+
+    Plane layout along axis 1: [values | bitcast int32 local indices |
+    extra planes...] — ``extra_planes`` is a list of ``(array, fill)``
+    pairs of (n_pad,) f32 attributes riding along (the KLA level).
+    Returns ``(payload, overflow)``; empty slots carry ``worst`` values
+    and the index sentinel n_local (the owner's discarded dummy slot).
+    """
+    Pn = n_parts
+    n_local = C.shape[0] // Pn
+    C2 = C.reshape(Pn, n_local)
+    slot, overflow = bucket_slots(C2 != worst, slot_cap)
+    lidx = jnp.broadcast_to(
+        jnp.arange(n_local, dtype=jnp.int32)[None, :], C2.shape
+    )
+    idx_buf = scatter_plane(lidx, slot, slot_cap, jnp.int32(n_local))
+    planes = [
+        scatter_plane(C2, slot, slot_cap, jnp.float32(worst)),
+        jax.lax.bitcast_convert_type(idx_buf, jnp.float32),
+    ]
+    for arr, fill in extra_planes:
+        planes.append(
+            scatter_plane(
+                arr.reshape(Pn, n_local), slot, slot_cap, jnp.float32(fill)
+            )
+        )
+    return jnp.concatenate(planes, axis=1), overflow
+
+
+def unpack_combine(
+    recv: jax.Array,
+    n_local: int,
+    slot_cap: int,
+    is_min: bool,
+    worst,
+    has_level: bool,
+):
+    """Owner-side combine of a received (P, K·S) payload.
+
+    Returns ``(mine, mineL)``: the (n_local,) combined candidate per
+    owned vertex and, when ``has_level``, the minimum level among
+    candidates matching the winning value (the dense path's
+    deterministic tie-break); ``mineL`` is None otherwise.
+    """
+    S = slot_cap
+    val = recv[:, :S]
+    idx = jax.lax.bitcast_convert_type(recv[:, S : 2 * S], jnp.int32)
+    buf = jnp.full((n_local + 1,), worst, jnp.float32)
+    flat_i, flat_v = idx.reshape(-1), val.reshape(-1)
+    buf = buf.at[flat_i].min(flat_v) if is_min else buf.at[flat_i].max(flat_v)
+    mine = buf[:n_local]
+    if not has_level:
+        return mine, None
+    lvl = recv[:, 2 * S : 3 * S]
+    win = val == buf[idx]  # sentinel slots: worst == worst, lvl fill = inf
+    lbuf = jnp.full((n_local + 1,), INF, jnp.float32)
+    lbuf = lbuf.at[flat_i].min(jnp.where(win, lvl, INF).reshape(-1))
+    return mine, lbuf[:n_local]

@@ -23,6 +23,12 @@ class WorkMetrics:
     supersteps: int = 0     # distributed engine loop iterations
     exchange_bytes: int = 0  # bytes moved by candidate exchange collectives
     collective_rounds: int = 0
+    converged: bool = True  # False iff the loop hit max_iters with
+    #                         pending work left (state is truncated)
+    sparse_fallbacks: int = 0  # supersteps on which a sparse-capable
+    #   exchange mode ('sparse'/'auto') used the dense path instead —
+    #   capacity overflow, the auto pending-count heuristic, or auto's
+    #   static can't-pay shortcut; 0 in plain dense modes
 
     def waste_ratio(self) -> float:
         """Relaxations per useful commit — the paper's redundant-work axis."""
@@ -37,6 +43,7 @@ class WorkMetrics:
             f"workitems={self.workitems} commits={self.commits} "
             f"relax={self.relaxations} waste={self.waste_ratio():.2f} "
             f"xbytes={self.exchange_bytes}"
+            + ("" if self.converged else " TRUNCATED")
         )
 
 

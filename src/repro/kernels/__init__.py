@@ -2,14 +2,20 @@
 interpret mode; `impl='pallas'` targets real TPUs).
 
 relax_ell        min-plus ELL relaxation — the paper's rule R1 / SSSP hot loop
+relax_push       push-mode frontier relaxation (sparse supersteps; the
+                 scalar-prefetch gather of exactly the eligible rows)
 spmm_ell         neighbor aggregation (GNN SpMM regime)
 flash_attention  blockwise-softmax causal GQA (LM hot spot)
 embedding_bag    scalar-prefetch ragged gather+reduce (recsys hot path)
 """
 
 from repro.kernels.relax_ell import relax_rows
+from repro.kernels.relax_push import relax_push_rows
 from repro.kernels.spmm_ell import aggregate_neighbors
 from repro.kernels.flash_attention import mha
 from repro.kernels.embedding_bag import bag_pool
 
-__all__ = ["relax_rows", "aggregate_neighbors", "mha", "bag_pool"]
+__all__ = [
+    "relax_rows", "relax_push_rows", "aggregate_neighbors", "mha",
+    "bag_pool",
+]

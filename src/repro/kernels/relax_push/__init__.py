@@ -1,0 +1,5 @@
+from repro.kernels.relax_push.kernel import relax_push_gather
+from repro.kernels.relax_push.ops import relax_push_rows
+from repro.kernels.relax_push.ref import relax_push_ref
+
+__all__ = ["relax_push_gather", "relax_push_rows", "relax_push_ref"]

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: push-mode frontier relaxation (sparse SSSP hot
+loop).
+
+The dense pull kernel (kernels/relax_ell) reads ALL R virtual rows per
+superstep; once the engine compacts the eligible class into a
+fixed-capacity index list (core/frontier.py), the hot loop only needs
+the F listed rows.  This kernel is the gather half of that push step:
+
+    cand[f, :] = dist[row_src[idx[f]]] + wgt[idx[f], :]
+
+TPU mapping (DESIGN.md hardware-adaptation): ``row_idx`` is a
+*scalar-prefetched* operand (PrefetchScalarGridSpec, same idiom as
+kernels/embedding_bag) — the BlockSpec index maps read ``idx[f]``, so
+the DMA engine streams exactly the (1, W) col/wgt strips the frontier
+names out of HBM while compute overlaps; rows the frontier does not
+touch are never moved.  The distance vector stays VMEM-resident.
+Slots past the live count are masked to +inf so the caller's
+scatter-min (XLA's native scatter, which Mosaic lacks a vector
+primitive for — see ops.relax_push_rows) treats them as padding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _push_kernel(idx_ref, cnt_ref, dist_ref, src_ref, wgt_ref, out_ref):
+    """One grid step: virtual row idx[f].  All tensor refs in VMEM."""
+    f = pl.program_id(0)
+    d = dist_ref[...]                      # (n_local+1,) resident
+    s = d[src_ref[0]]                      # scalar source state
+    cand = s + wgt_ref[...]                # (1, W) min-plus product
+    out_ref[...] = jnp.where(f < cnt_ref[0], cand, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def relax_push_gather(
+    dist: jax.Array,     # (n_local+1,) f32; slot n_local = +inf dummy
+    row_idx: jax.Array,  # (F,) int32 row ids (entries past `count` ignored)
+    count,               # scalar int32: live prefix length of row_idx
+    row_src: jax.Array,  # (R,) int32
+    col: jax.Array,      # (R, W) int32 (unused here; shapes the frontier)
+    wgt: jax.Array,      # (R, W) f32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (F, W) f32 candidates for the listed rows; masked slots
+    carry +inf.  Callers scatter with the correspondingly gathered
+    ``col`` rows (padding column annihilates either way)."""
+    del col
+    F = row_idx.shape[0]
+    R, W = wgt.shape
+    idx = jnp.clip(row_idx, 0, R - 1)  # fill sentinel R -> in-range block
+    cnt = jnp.reshape(jnp.minimum(jnp.int32(count), jnp.int32(F)), (1,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # row_idx, cnt
+        grid=(F,),
+        in_specs=[
+            pl.BlockSpec(dist.shape, lambda f, idx, cnt: (0,)),  # resident
+            pl.BlockSpec((1,), lambda f, idx, cnt: (idx[f],)),
+            pl.BlockSpec((1, W), lambda f, idx, cnt: (idx[f], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda f, idx, cnt: (f, 0)),
+    )
+    return pl.pallas_call(
+        _push_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((F, W), jnp.float32),
+        interpret=interpret,
+    )(idx, cnt, dist, row_src, wgt)

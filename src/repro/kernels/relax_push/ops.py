@@ -1,0 +1,44 @@
+"""Public op: push-mode frontier relaxation with scatter handling.
+
+``relax_push_rows(...)`` relaxes exactly the virtual rows named by a
+compacted frontier index list and scatter-mins the candidates into an
+(n_out,) buffer.  The Pallas kernel covers the gather/relax half (the
+part that scales with F, streamed by scalar-prefetch DMA); the final
+scatter-min runs as XLA's native scatter — Mosaic has no vector
+scatter primitive, and at F·W elements the scatter is no longer the
+hot spot.  ``impl='ref'`` is the pure-jnp oracle the distributed
+engine inlines (same math, fusable inside shard_map)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.relax_push.kernel import relax_push_gather
+from repro.kernels.relax_push.ref import relax_push_ref
+
+
+def relax_push_rows(
+    dist: jax.Array,
+    row_idx: jax.Array,
+    row_src: jax.Array,
+    col: jax.Array,
+    wgt: jax.Array,
+    n_out: int,
+    *,
+    count=None,
+    impl: str = "ref",   # 'ref' | 'pallas' | 'pallas_interpret'
+) -> jax.Array:
+    """(n_out,) scatter-min'd min-plus candidates of the listed rows."""
+    if impl == "ref":
+        return relax_push_ref(dist, row_idx, row_src, col, wgt, n_out)
+    R = row_src.shape[0]
+    if count is None:
+        count = jnp.sum((row_idx >= 0) & (row_idx < R))
+    cand = relax_push_gather(
+        dist, row_idx, count, row_src, col, wgt,
+        interpret=(impl == "pallas_interpret"),
+    )
+    colg = jnp.take(col, row_idx, axis=0, mode="fill", fill_value=n_out)
+    buf = jnp.full((n_out + 1,), jnp.inf, dtype=jnp.float32)
+    return buf.at[colg.reshape(-1)].min(cand.reshape(-1))[:n_out]

@@ -18,6 +18,8 @@ import time
 
 import numpy as np
 
+from repro.core.engine import EXCHANGE_MODES
+
 
 def build_graph(kind: str, scale: int, seed: int):
     from repro.graph import (
@@ -42,12 +44,12 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--spec", default=None,
                     help="solver spec root[+variant][/exchange], "
-                         "e.g. delta:5+threadq/a2a")
+                         "e.g. delta:5+threadq/a2a or dijkstra/sparse")
     ap.add_argument("--root", default="delta:5")
     ap.add_argument("--variant", default="buffer",
                     choices=["buffer", "threadq", "nodeq", "numaq"])
     ap.add_argument("--exchange", default="a2a",
-                    choices=["a2a", "pmin"])
+                    choices=list(EXCHANGE_MODES))
     ap.add_argument("--chunk", type=int, default=1024)
     ap.add_argument("--sources", type=int, nargs="+", default=[0],
                     help=">1 source solves the batch in one engine call")

@@ -42,6 +42,13 @@ def test_from_spec_full():
     assert (c.root, c.variant, c.exchange) == ("delta:5", "threadq", "pmin")
 
 
+def test_from_spec_sparse_modes():
+    c = SolverConfig.from_spec("delta:5+threadq/sparse", frontier_cap=64)
+    assert c.exchange == "sparse" and c.frontier_cap == 64
+    c = SolverConfig.from_spec("kla:2/auto")
+    assert (c.root, c.variant, c.exchange) == ("kla:2", "buffer", "auto")
+
+
 def test_from_spec_defaults_and_overrides():
     c = SolverConfig.from_spec("kla:2")
     assert (c.root, c.variant, c.exchange) == ("kla:2", "buffer", "a2a")
@@ -57,6 +64,8 @@ def test_from_spec_defaults_and_overrides():
         dict(exchange="rdma"),
         dict(chunk_size=0),
         dict(max_iters=0),
+        dict(frontier_cap=0),
+        dict(relax_impl="cuda"),
     ],
 )
 def test_config_validation(bad):
@@ -279,3 +288,113 @@ def test_one_shot_solve(tiny_graphs, mesh1):
     g = tiny_graphs[0]
     sol = api.solve(Problem(g, SingleSource(0)), "delta:5", mesh=mesh1)
     assert close(dijkstra_reference(g, 0), sol.state)
+
+
+# ----------------------------------------------------- state-init bugfix
+
+
+def test_initial_state_combines_duplicate_sources(tiny_graphs):
+    """Duplicate initial workitems targeting one vertex must combine
+    with processing.reduce (keep the best), not last-write-wins."""
+    from repro.core import SSSP, SSWP, initial_state
+    from repro.graph import partition_1d
+
+    pg = partition_1d(tiny_graphs[0], 1)
+    # min semiring: the smaller state wins regardless of order
+    _, T, L = initial_state(
+        pg, SSSP, [(5, 3.0, 2), (5, 1.0, 7), (5, 2.0, 0)]
+    )
+    assert T[0, 5] == 1.0 and L[0, 5] == 7.0
+    # equal states keep the smallest level (deterministic tie-break)
+    _, T, L = initial_state(pg, SSSP, [(6, 2.0, 9), (6, 2.0, 3)])
+    assert T[0, 6] == 2.0 and L[0, 6] == 3.0
+    # max semiring (SSWP): the LARGER capacity wins
+    _, T, _ = initial_state(pg, SSWP, [(4, 5.0, 0), (4, 2.0, 0)])
+    assert T[0, 4] == 5.0
+
+
+def test_duplicate_sources_end_to_end(tiny_graphs, solver):
+    """ExplicitSources with duplicates solves as if only the best
+    duplicate existed."""
+    g = tiny_graphs[0]
+    dup = solver.solve(Problem(
+        g, ExplicitSources([(0, 0.0, 0), (9, 8.0, 0), (9, 1.5, 0)])
+    ))
+    best = solver.solve(Problem(
+        g, ExplicitSources([(0, 0.0, 0), (9, 1.5, 0)])
+    ))
+    assert np.array_equal(dup.state, best.state)
+
+
+# -------------------------------------------------- truncation detection
+
+
+def test_max_iters_truncation_warns(tiny_graphs, mesh1):
+    g = tiny_graphs[0]
+    solver = Solver(
+        SolverConfig(root="dijkstra", max_iters=2), mesh=mesh1
+    )
+    with pytest.warns(RuntimeWarning, match="max_iters"):
+        sol = solver.solve(Problem(g, SingleSource(0)))
+    assert not sol.metrics.converged
+    assert sol.metrics.supersteps == 2
+    full = Solver(SolverConfig(root="dijkstra"), mesh=mesh1).solve(
+        Problem(g, SingleSource(0))
+    )
+    assert full.metrics.converged
+    assert close(dijkstra_reference(g, 0), full.state)
+
+
+# ------------------------------------------------ exchange-byte metrics
+
+
+def test_exchange_bytes_nonzero_and_mode_dependent(tiny_graphs):
+    """Regression: the analytic byte model must be nonzero for P > 1
+    and distinguish exchange modes (a2a moves (P-1)·n_local·4 per
+    device per superstep; pmin ~2x that as a ring all-reduce)."""
+    from repro.api.solver import _finish_metrics
+    from repro.core import make_policy
+    from repro.core.engine import EngineConfig
+    from repro.graph import partition_1d
+
+    pg = partition_1d(tiny_graphs[0], 4)
+    pol = make_policy("delta:5", "buffer")
+    a2a = _finish_metrics(
+        pg, EngineConfig(policy=pol, exchange="a2a"), 10, 5, 5, 5
+    )
+    pmin = _finish_metrics(
+        pg, EngineConfig(policy=pol, exchange="pmin"), 10, 5, 5, 5
+    )
+    assert a2a.exchange_bytes > 0
+    assert pmin.exchange_bytes == 2 * a2a.exchange_bytes
+    assert a2a.exchange_bytes == 10 * 4 * pg.n_local * 3 * 4  # it·4B·nl·(P-1)·P
+    # sparse mode: bytes reconstruct from the dense-step count
+    from repro.core import frontier_caps
+
+    scfg = EngineConfig(policy=pol, exchange="sparse", frontier_cap=2)
+    sp = _finish_metrics(pg, scfg, 10, 5, 5, 5, active=0, fallbacks=3)
+    _, S = frontier_caps(
+        pg.rows_per_rank, pg.width, pg.n_local, pg.n_parts, 2
+    )
+    dense_words = (pg.n_parts - 1) * pg.n_local
+    sparse_words = (pg.n_parts - 1) * 2 * S
+    assert sp.exchange_bytes == (
+        (7 * sparse_words + 3 * dense_words) * 4 * pg.n_parts
+    )
+    assert sp.sparse_fallbacks == 3
+    assert sp.exchange_bytes < a2a.exchange_bytes
+    # single device genuinely moves nothing
+    pg1 = partition_1d(tiny_graphs[0], 1)
+    m1 = _finish_metrics(
+        pg1, EngineConfig(policy=pol, exchange="a2a"), 10, 5, 5, 5
+    )
+    assert m1.exchange_bytes == 0
+
+
+def test_solution_reports_exchange_bytes_multidev_shapes(tiny_graphs, solver):
+    """End-to-end single-device solves report zero exchange bytes (one
+    rank moves nothing) but nonzero collective rounds."""
+    sol = solver.solve(Problem(tiny_graphs[0], SingleSource(0)))
+    assert sol.metrics.exchange_bytes == 0
+    assert sol.metrics.collective_rounds > 0
+    assert sol.metrics.converged

@@ -45,7 +45,7 @@ def test_sssp_variants_match_oracle(tiny_graphs, mesh1, root, variant):
     assert sol.metrics.supersteps > 0 and sol.metrics.commits > 0
 
 
-@pytest.mark.parametrize("exchange", ["a2a", "pmin"])
+@pytest.mark.parametrize("exchange", ["a2a", "pmin", "sparse", "auto"])
 def test_exchange_paths_agree(tiny_graphs, mesh1, exchange):
     g = tiny_graphs[1]
     ref = dijkstra_reference(g, 0)

@@ -1,0 +1,96 @@
+"""Property-based sparse/auto vs dense equivalence on arbitrary random
+graphs (hypothesis; skips itself when the optional dep is absent).
+
+Every example partitions its random graph into ONE fixed (P=1,
+n_local, R, W) ELL shape — virtual rows padded up to a static cap — so
+the whole run reuses a handful of compiled engines instead of
+re-tracing per graph."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
+)
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference
+from repro.graph import partition_1d
+from repro.graph.formats import Graph
+
+SPECS = [
+    "delta:5+threadq", "kla:2+buffer", "dijkstra+buffer", "chaotic+numaq",
+]
+N_FIXED, W_FIXED, R_FIXED = 48, 4, 192
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def close(a, b):
+    return np.allclose(
+        np.where(np.isinf(a), -1, a), np.where(np.isinf(b), -1, b)
+    )
+
+
+def _fixed_shape_pg(m, seed):
+    r = np.random.default_rng(seed)
+    g = Graph(
+        N_FIXED,
+        r.integers(0, N_FIXED, m).astype(np.int64),
+        r.integers(0, N_FIXED, m).astype(np.int64),
+        r.uniform(0.5, 20.0, m).astype(np.float32),
+    )
+    pg = partition_1d(g, 1, width=W_FIXED)
+    R = pg.row_src.shape[1]
+    assert R <= R_FIXED, R
+    pad = R_FIXED - R
+    row_src = np.concatenate(
+        [pg.row_src, np.full((1, pad), pg.n_local, np.int32)], axis=1
+    )
+    col = np.concatenate(
+        [pg.col, np.full((1, pad, W_FIXED), pg.n_pad, np.int32)], axis=1
+    )
+    wgt = np.concatenate(
+        [pg.wgt, np.full((1, pad, W_FIXED), np.inf, np.float32)], axis=1
+    )
+    return g, dataclasses.replace(pg, row_src=row_src, col=col, wgt=wgt)
+
+
+@pytest.mark.slow
+@settings(
+    max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    m=st.integers(min_value=10, max_value=120),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    spec=st.sampled_from(SPECS),
+    exchange=st.sampled_from(["sparse", "auto"]),
+    cap=st.sampled_from([None, 4]),
+    source=st.integers(min_value=0, max_value=N_FIXED - 1),
+)
+def test_property_sparse_matches_dense(
+    mesh1, m, seed, spec, exchange, cap, source
+):
+    """Any sparse/auto family member's state is bit-identical to its
+    dense twin, and both match the Dijkstra oracle."""
+    g, pg = _fixed_shape_pg(m, seed)
+    dense = Solver(
+        SolverConfig.from_spec(spec, exchange="a2a", chunk_size=16),
+        mesh=mesh1,
+    ).solve(Problem(pg, SingleSource(source)))
+    sp = Solver(
+        SolverConfig.from_spec(
+            spec, exchange=exchange, chunk_size=16, frontier_cap=cap
+        ),
+        mesh=mesh1,
+    ).solve(Problem(pg, SingleSource(source)))
+    assert np.array_equal(dense.state, sp.state)
+    assert close(dijkstra_reference(g, source), sp.state)

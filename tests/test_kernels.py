@@ -34,6 +34,47 @@ def test_relax_ell_sweep(n_pad, R, W, block):
                                rtol=1e-6)
 
 
+@pytest.mark.parametrize("n_local,n_pad,R,W,F", [
+    (128, 256, 96, 8, 32),
+    (256, 512, 300, 16, 64),
+    (64, 128, 40, 4, 64),     # F > R: every row can be listed
+    (128, 128, 50, 8, 1),     # single-row frontier
+])
+def test_relax_push_sweep(n_local, n_pad, R, W, F):
+    """Push-mode frontier relax: Pallas (interpret) == jnp oracle ==
+    dense pull relax restricted to the listed rows."""
+    from repro.kernels import relax_push_rows
+
+    dist = jnp.concatenate([
+        jnp.asarray(rng.exponential(10, n_local), jnp.float32),
+        jnp.array([jnp.inf]),
+    ])
+    row_src = jnp.asarray(rng.integers(0, n_local, R), jnp.int32)
+    col = jnp.asarray(rng.integers(0, n_pad + 1, (R, W)), jnp.int32)
+    wgt = jnp.where(
+        col == n_pad, jnp.inf,
+        jnp.asarray(rng.uniform(1, 100, (R, W)), jnp.float32),
+    )
+    k = min(F, max(1, R // 3))
+    frontier = np.sort(rng.choice(R, k, replace=False)).astype(np.int32)
+    row_idx = jnp.asarray(
+        np.concatenate([frontier, np.full(F - k, R, np.int32)])
+    )
+    ref = relax_push_rows(dist, row_idx, row_src, col, wgt, n_pad,
+                          impl="ref")
+    out = relax_push_rows(dist, row_idx, row_src, col, wgt, n_pad,
+                          impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-6)
+    # numpy oracle: scatter-min the listed rows' min-plus candidates
+    oracle = np.full(n_pad + 1, np.inf, np.float32)
+    dist_np, col_np = np.asarray(dist), np.asarray(col)
+    wgt_np, src_np = np.asarray(wgt), np.asarray(row_src)
+    for r in frontier:
+        np.minimum.at(oracle, col_np[r], dist_np[src_np[r]] + wgt_np[r])
+    np.testing.assert_allclose(np.asarray(ref), oracle[:n_pad], rtol=1e-6)
+
+
 @pytest.mark.parametrize("op", ["sum", "max"])
 @pytest.mark.parametrize("n_x,R,W,d", [
     (100, 64, 4, 32),
