@@ -18,6 +18,10 @@ CLI:  PYTHONPATH=src python benchmarks/bench_variants.py \
 ``--quick`` shrinks the grid (CI trajectory job); the JSON rows carry
 supersteps, bytes, bytes/superstep, fallbacks and wall time per
 variant × exchange so the perf trajectory accumulates across PRs.
+Besides the preset grid, ``HIERARCHY_SPECS`` adds composed multi-level
+hierarchy points (grammar v2, e.g. ``delta:5 > pod:dijkstra >
+chunk:delta:1``) so the beyond-paper family space is tracked too —
+including in ``--quick``.
 """
 
 from __future__ import annotations
@@ -28,6 +32,12 @@ import subprocess
 import sys
 
 EXCHANGES = ["a2a", "sparse", "auto"]
+
+#: beyond-paper multi-level hierarchy family points (grammar v2) so
+#: BENCH_variants.json tracks them alongside the preset grid
+HIERARCHY_SPECS = [
+    "delta:5 > pod:dijkstra > chunk:delta:1",
+]
 
 CHILD = r"""
 import json, time
@@ -49,33 +59,41 @@ else:
     roots = ["delta:3", "delta:5", "delta:7", "kla:1", "kla:2", "kla:3",
              "chaotic", "dijkstra"]
     variants = ["buffer", "threadq", "nodeq", "numaq"]
+# (root, variant) preset points + composed multi-level hierarchies —
+# a hierarchy config rides the same solve/measure path with
+# variant='hierarchy' and the grammar-v2 spec as its root
+points = [(root, variant) for root in roots for variant in variants]
+points += [(spec, "hierarchy") for spec in %(hier_specs)s]
 for gname, gen in graphs:
     g = gen(SCALE, seed=7)
     ref = dijkstra_reference(g, 0)
-    for root in roots:
-        for variant in variants:
-            for exchange in %(exchanges)s:
-                solver = Solver(
-                    SolverConfig(root=root, variant=variant,
-                                 exchange=exchange, chunk_size=256,
-                                 frontier_cap=%(frontier_cap)s),
-                    mesh=mesh)
-                prob = Problem(g, SingleSource(0))
-                sol = solver.solve(prob)          # compile + warm
-                t0 = time.perf_counter()
-                sol = solver.solve(prob)
-                wall_s = time.perf_counter() - t0
-                m = sol.metrics
-                ok = np.allclose(np.where(np.isinf(ref), -1, ref),
-                                 np.where(np.isinf(sol.state), -1,
-                                          sol.state))
-                rows.append(dict(
-                    graph=gname, scale=SCALE, root=root, variant=variant,
-                    exchange=exchange, ok=bool(ok), wall_s=wall_s,
-                    model_ms=model_time_s(m, 256) * 1e3,
-                    bytes_per_superstep=(
-                        m.exchange_bytes / max(1, m.supersteps)),
-                    **m.as_dict()))
+    for root, variant in points:
+        for exchange in %(exchanges)s:
+            if variant == "hierarchy":
+                cfg = SolverConfig.from_spec(
+                    root, exchange=exchange, chunk_size=256,
+                    frontier_cap=%(frontier_cap)s)
+            else:
+                cfg = SolverConfig(root=root, variant=variant,
+                                   exchange=exchange, chunk_size=256,
+                                   frontier_cap=%(frontier_cap)s)
+            solver = Solver(cfg, mesh=mesh)
+            prob = Problem(g, SingleSource(0))
+            sol = solver.solve(prob)          # compile + warm
+            t0 = time.perf_counter()
+            sol = solver.solve(prob)
+            wall_s = time.perf_counter() - t0
+            m = sol.metrics
+            ok = np.allclose(np.where(np.isinf(ref), -1, ref),
+                             np.where(np.isinf(sol.state), -1,
+                                      sol.state))
+            rows.append(dict(
+                graph=gname, scale=SCALE, root=root, variant=variant,
+                exchange=exchange, ok=bool(ok), wall_s=wall_s,
+                model_ms=model_time_s(m, 256) * 1e3,
+                bytes_per_superstep=(
+                    m.exchange_bytes / max(1, m.supersteps)),
+                **m.as_dict()))
 print(json.dumps(rows))
 """
 
@@ -94,6 +112,7 @@ def run(
         "quick": int(quick),
         "exchanges": repr(exchanges or EXCHANGES),
         "frontier_cap": repr(frontier_cap),
+        "hier_specs": repr(HIERARCHY_SPECS),
     }
     r = subprocess.run(
         [sys.executable, "-c", child], env=env,
@@ -116,10 +135,17 @@ def main(
     out = []
     for r in rows:
         assert r["ok"], r
-        name = (
-            f"fig5-7/{r['graph']}_s{r['scale']}/"
-            f"{r['root']}+{r['variant']}/{r['exchange']}"
-        )
+        if r["variant"] == "hierarchy":
+            point = r["root"].replace(" ", "")  # grammar-v2 spec
+            name = (
+                f"family/{r['graph']}_s{r['scale']}/"
+                f"{point}/{r['exchange']}"
+            )
+        else:
+            name = (
+                f"fig5-7/{r['graph']}_s{r['scale']}/"
+                f"{r['root']}+{r['variant']}/{r['exchange']}"
+            )
         derived = (
             f"relax={r['relaxations']};steps={r['supersteps']};"
             f"commits={r['commits']};xbytes={r['exchange_bytes']};"

@@ -8,4 +8,4 @@ Subpackages: api (facade), core (the paper), graph, kernels (Pallas),
 models, train, data, configs (--arch registry), launch, roofline.
 """
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"

@@ -7,9 +7,16 @@ config) fed data (:class:`Problem`).
 
     from repro.api import Problem, SingleSource, Solver
 
-    solver = Solver("delta:5+threadq/a2a")
+    solver = Solver("delta:5+threadq/a2a")          # paper preset
+    solver = Solver("delta:5 > pod:dijkstra > chunk:delta:1")  # composed
     sol = solver.solve(Problem(graph, SingleSource(0)))
     sol.state, sol.metrics
+
+One spec = one point of the algorithm family: the EAGM ordering
+hierarchy (``repro.core.Hierarchy``) annotates spatial levels
+(global > pod > device > chunk) with strict weak orderings, and the
+engine realizes each annotation with the cheapest collective its
+scope allows.
 
 Capabilities beyond the old ``run_distributed``:
   * compile-once/solve-many — engines live in a process-wide LRU cache
@@ -19,6 +26,7 @@ Capabilities beyond the old ``run_distributed``:
     after improving perturbations (new sources, cheaper edges)
 """
 
+from repro.core.eagm import Hierarchy, make_hierarchy
 from repro.api.config import SolverConfig, as_config
 from repro.api.problem import (
     EveryVertex,
@@ -42,7 +50,7 @@ from repro.api.solver import (
 )
 
 __all__ = [
-    "SolverConfig", "as_config",
+    "SolverConfig", "as_config", "Hierarchy", "make_hierarchy",
     "Problem", "SingleSource", "MultiSource", "EveryVertex",
     "ExplicitSources", "SourceSpec", "as_source_spec",
     "register_processing", "get_processing",

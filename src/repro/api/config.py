@@ -1,19 +1,34 @@
 """One validated configuration object for the whole solver stack.
 
-``SolverConfig`` folds the AGM root ordering, the EAGM spatial variant
-(paper §IV), the candidate-exchange strategy and the chunk/iteration
-knobs that used to be spread over ``EngineConfig`` + ``EAGMPolicy`` +
-string specs.  The compact spec grammar is
+``SolverConfig`` folds the EAGM ordering hierarchy (paper §IV), the
+candidate-exchange strategy and the iteration knobs into one frozen,
+hashable value.  The single source of truth is the ``hierarchy``
+field — a :class:`repro.core.eagm.Hierarchy` annotating spatial
+levels (global / pod / device / chunk) with strict weak orderings;
+``root`` / ``variant`` / ``chunk_size`` are legacy convenience inputs
+that construct the equivalent hierarchy and are excluded from
+equality (two configs are the same iff they run the same engine).
 
-    root[+variant][/exchange]     e.g.  "delta:5+threadq/a2a"
+The compact spec grammar has two forms:
 
-with root ∈ {chaotic, dijkstra, delta:Δ, kla:K}, variant ∈ {buffer,
-threadq, nodeq, numaq} and exchange ∈ {a2a, pmin, sparse, auto} — the
-paper's Figure-4 family grid plus the frontier-sparse execution modes
-(``/sparse``: O(frontier) compaction + (idx, val) all_to_all with a
-dense fallback on capacity overflow; ``/auto``: sparse only while the
-carried pending count is small).  ``frontier_cap`` bounds the
-per-device compacted frontier (None = rows/8).
+legacy (v1, the paper's Figure-4 grid)::
+
+    root[+variant][/exchange]          "delta:5+threadq/a2a"
+
+hierarchy (v2, the full family space)::
+
+    root[ > level:ordering]...[/exchange]
+    "delta:5 > pod:dijkstra > chunk:delta:1 /sparse"
+
+with root/ordering ∈ {chaotic, dijkstra, delta:Δ, kla:K, topk:B},
+level ∈ {pod, device, chunk} (the root is the implicit ``global``
+annotation), variant ∈ {buffer, threadq, nodeq, numaq} and exchange ∈
+{a2a, pmin, sparse, auto} — the paper's family grid plus the
+frontier-sparse execution modes (``/sparse``: O(frontier) compaction
++ (idx, val) all_to_all with a dense fallback on capacity overflow;
+``/auto``: sparse only while the carried pending count is small).
+``frontier_cap`` bounds the per-device compacted frontier (None =
+rows/8).  Both grammars round-trip through ``config.name``.
 """
 
 from __future__ import annotations
@@ -21,9 +36,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
-from repro.core.eagm import EAGMPolicy, VARIANT_LEVEL, make_policy
-from repro.core.engine import EXCHANGE_MODES, EngineConfig
-from repro.core.ordering import make_ordering
+from repro.core.eagm import DEFAULT_CHUNK, Hierarchy, make_hierarchy
+from repro.core.engine import EXCHANGE_MODES, EngineConfig, RELAX_IMPLS
+from repro.core.ordering import suggest
 from repro.core.processing import ProcessingFn
 
 EXCHANGES = EXCHANGE_MODES
@@ -31,64 +46,104 @@ EXCHANGES = EXCHANGE_MODES
 
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
-    root: str = "delta:5"          # AGM ordering spec
-    variant: str = "buffer"        # EAGM spatial variant
+    # legacy construction inputs; derived from / superseded by
+    # ``hierarchy`` and excluded from equality and hashing
+    root: str = dataclasses.field(default="delta:5", compare=False)
+    variant: str = dataclasses.field(default="buffer", compare=False)
     exchange: str = "a2a"          # candidate exchange strategy
-    chunk_size: int = 1024         # B for chunk-level (threadq) draining
+    chunk_size: int = dataclasses.field(default=DEFAULT_CHUNK, compare=False)
     max_iters: int = 10**9
     collect_metrics: bool = True
     frontier_cap: Optional[int] = None  # sparse-path row capacity F
     relax_impl: str = "ref"        # sparse relax backend ('ref'|'pallas')
+    # the EAGM ordering hierarchy — the source of truth.  When given
+    # (directly, as a spec string, or via ``from_spec`` grammar v2) it
+    # wins and root/variant are re-derived for display.
+    hierarchy: Optional[Hierarchy] = None
 
     def __post_init__(self):
-        make_ordering(self.root)  # raises on a bad ordering spec
-        if self.variant not in VARIANT_LEVEL:
-            raise ValueError(
-                f"variant must be one of {sorted(VARIANT_LEVEL)}, "
-                f"got {self.variant!r}"
+        if self.chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive: {self.chunk_size}")
+        if self.hierarchy is None:
+            # make_hierarchy validates root spec and variant (with
+            # did-you-mean suggestions)
+            object.__setattr__(
+                self,
+                "hierarchy",
+                make_hierarchy(self.root, self.variant, self.chunk_size),
             )
+        else:
+            h = self.hierarchy
+            if isinstance(h, str):
+                h = Hierarchy.from_spec(h, chunk_size=self.chunk_size)
+            elif not isinstance(h, Hierarchy):
+                h = Hierarchy(tuple(h))
+            object.__setattr__(self, "hierarchy", h)
+            object.__setattr__(self, "root", h.root.spec)
+            object.__setattr__(self, "variant", h.variant or "hierarchy")
         if self.exchange not in EXCHANGES:
             raise ValueError(
                 f"exchange must be one of {EXCHANGES}, got {self.exchange!r}"
+                f"{suggest(str(self.exchange), EXCHANGES)}"
             )
-        if self.chunk_size <= 0:
-            raise ValueError(f"chunk_size must be positive: {self.chunk_size}")
         if self.max_iters <= 0:
             raise ValueError(f"max_iters must be positive: {self.max_iters}")
         if self.frontier_cap is not None and self.frontier_cap <= 0:
             raise ValueError(
                 f"frontier_cap must be positive: {self.frontier_cap}"
             )
-        if self.relax_impl not in ("ref", "pallas", "pallas_interpret"):
+        if self.relax_impl not in RELAX_IMPLS:
             raise ValueError(
-                f"relax_impl must be 'ref', 'pallas' or 'pallas_interpret',"
-                f" got {self.relax_impl!r}"
+                f"relax_impl must be one of {RELAX_IMPLS}, "
+                f"got {self.relax_impl!r}"
+                f"{suggest(str(self.relax_impl), RELAX_IMPLS)}"
             )
 
     @classmethod
     def from_spec(cls, spec: str, **overrides) -> "SolverConfig":
-        """Parse ``"root[+variant][/exchange]"``; keyword overrides win
-        over the parsed fields."""
-        rest = spec.strip()
+        """Parse ``"root[+variant][/exchange]"`` (legacy) or
+        ``"root[ > level:ordering]...[/exchange]"`` (hierarchy);
+        keyword overrides win over the parsed fields.  Malformed specs
+        (empty segments, whitespace-only parts) raise with the
+        offending spec quoted."""
+        rest = str(spec).strip()
+        if not rest:
+            raise ValueError(f"empty solver spec {spec!r}")
         if "/" in rest:
             rest, exchange = rest.rsplit("/", 1)
-            overrides.setdefault("exchange", exchange.strip())
+            rest, exchange = rest.strip(), exchange.strip()
+            if not exchange:
+                raise ValueError(f"empty exchange segment in spec {spec!r}")
+            if not rest:
+                raise ValueError(f"empty ordering segment in spec {spec!r}")
+            overrides.setdefault("exchange", exchange)
+        if ">" in rest or rest.lower().startswith("global:"):
+            chunk = overrides.get("chunk_size", DEFAULT_CHUNK)
+            return cls(
+                hierarchy=Hierarchy.from_spec(rest, chunk_size=chunk),
+                **overrides,
+            )
         if "+" in rest:
             rest, variant = rest.split("+", 1)
-            overrides.setdefault("variant", variant.strip())
-        return cls(root=rest.strip(), **overrides)
+            rest, variant = rest.strip(), variant.strip()
+            if not variant:
+                raise ValueError(f"empty variant segment in spec {spec!r}")
+            overrides.setdefault("variant", variant)
+        if not rest:
+            raise ValueError(f"empty root segment in spec {spec!r}")
+        return cls(root=rest, **overrides)
 
     @property
     def name(self) -> str:
-        return f"{self.root}+{self.variant}/{self.exchange}"
-
-    @property
-    def policy(self) -> EAGMPolicy:
-        return make_policy(self.root, self.variant, chunk_size=self.chunk_size)
+        """Round-trippable spec: ``from_spec(cfg.name) == cfg``.  Emits
+        the legacy ``root+variant`` form when the hierarchy is a paper
+        preset (at the default chunk size), the ``>`` grammar
+        otherwise."""
+        return f"{self.hierarchy.name}/{self.exchange}"
 
     def engine_config(self, processing: ProcessingFn) -> EngineConfig:
         return EngineConfig(
-            policy=self.policy,
+            policy=self.hierarchy,
             processing=processing,
             exchange=self.exchange,
             max_iters=self.max_iters,

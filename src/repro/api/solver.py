@@ -47,7 +47,6 @@ from repro.core.engine import (
 )
 from repro.core.frontier import frontier_caps
 from repro.core.metrics import WorkMetrics
-from repro.core.ordering import needs_level
 from repro.core.processing import ProcessingFn
 from repro.graph.formats import Graph
 from repro.graph.partition import PartitionedGraph, partition_1d
@@ -141,7 +140,7 @@ def _finish_metrics(
     #   pmin  2x a2a — a full-array ring all-reduce per combine.
     #   sparse (P-1)·K·S words on sparse supersteps, dense a2a words on
     #         the `fallbacks` dense ones.
-    use_level = needs_level(ecfg.policy.root)
+    use_level = ecfg.hierarchy.needs_level
     nplanes = 2 if use_level else 1
     P_, nl = pg.n_parts, pg.n_local
     dense_words = (P_ - 1) * nl * nplanes

@@ -501,10 +501,14 @@ def mind_cell(arch: str, cell: str, cfg, topo: Topology) -> CellProgram:
 
 def sssp_cell(arch: str, cell: str, topo: Topology, *,
               scale: int, avg_degree: int, width: int,
-              root: str, variant: str, exchange: str) -> CellProgram:
+              root: str = "delta:5", variant: str = "buffer",
+              exchange: str = "a2a",
+              spec: "str | None" = None) -> CellProgram:
     """Abstract partitioned-graph SSSP solve on the production mesh.
     Shapes derive from (scale, avg_degree, width) without building
-    the graph: rows/rank ~ n_local * ceil(avg_deg/width) * safety."""
+    the graph: rows/rank ~ n_local * ceil(avg_deg/width) * safety.
+    ``spec`` (any solver spec — legacy ``root+variant/exchange`` or a
+    grammar-v2 hierarchy) overrides root/variant/exchange."""
     from repro.api import Solver, SolverConfig
     from repro.core.engine import build_step  # noqa: F401 (doc link)
 
@@ -514,9 +518,14 @@ def sssp_cell(arch: str, cell: str, topo: Topology, *,
     n_pad = n_local * P_
     # virtual rows per rank: ceil(deg/width) summed ~ e/width + n_local
     rows = int(1.3 * (n_local * avg_degree / width + n_local))
+    cfg = (
+        SolverConfig.from_spec(spec, chunk_size=4096)
+        if spec is not None
+        else SolverConfig(root=root, variant=variant, exchange=exchange,
+                          chunk_size=4096)
+    )
     solver = Solver(
-        SolverConfig(root=root, variant=variant, exchange=exchange,
-                     chunk_size=4096),
+        cfg,
         mesh=topo.mesh,
     )
     solve = solver.compiled(n_parts=P_, n_local=n_local)
@@ -539,6 +548,6 @@ def sssp_cell(arch: str, cell: str, topo: Topology, *,
         model_flops=flops_per_step,
         notes=(
             f"scale={scale} deg={avg_degree} W={width} "
-            f"{root}+{variant} exchange={exchange} (flops = one superstep)"
+            f"{cfg.name} (flops = one superstep)"
         ),
     )

@@ -39,6 +39,13 @@ SSSP_CELLS = {
         scale=27, avg_degree=4, width=4,
         root="delta:1200", variant="nodeq", exchange="a2a",
     ),
+    # beyond-paper 3-level hierarchy: Δ globally, Dijkstra within the
+    # pod, a finer Δ drained per chunk — inexpressible in the one-slot
+    # variant API, first-class in the hierarchy grammar
+    "rmat26_hier3_sparse": dict(
+        scale=26, avg_degree=32, width=32,
+        spec="delta:5 > pod:dijkstra > chunk:delta:1 /sparse",
+    ),
 }
 SHAPES = list(SSSP_CELLS)
 

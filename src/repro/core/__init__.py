@@ -1,10 +1,11 @@
 """AGM/EAGM core — the paper's primary contribution.
 
 Layers:
-  ordering.py    strict weak orderings (chaotic/dijkstra/Δ/KLA)
+  ordering.py    strict weak orderings (chaotic/dijkstra/Δ/KLA/topk)
   processing.py  processing functions π (SSSP/BFS/CC/SSWP)
   agm.py         Definition-3 AGM + logical (oracle) engine
-  eagm.py        spatial hierarchies (buffer/threadq/nodeq/numaq)
+  eagm.py        per-level ordering hierarchies (Hierarchy; the paper
+                 presets buffer/threadq/nodeq/numaq are points in it)
   frontier.py    O(frontier) compaction + sparse candidate exchange
   engine.py      distributed shard_map engine (the TPU realization)
   metrics.py     work/sync metrics + calibrated cost model
@@ -16,18 +17,26 @@ from repro.core.ordering import (
     DeltaStepping,
     KLA,
     Ordering,
+    TopK,
     make_ordering,
+    ordering_kinds,
+    register_ordering,
 )
 from repro.core.processing import SSSP, BFS, CC, SSWP, ProcessingFn
 from repro.core.agm import AGM, sssp_agm, run_logical, dijkstra_reference
 from repro.core.eagm import (
     EAGMPolicy,
+    Hierarchy,
+    LEVELS,
+    as_hierarchy,
+    make_hierarchy,
     make_policy,
     paper_variant_grid,
     paper_variant_specs,
 )
 from repro.core.engine import (
     EXCHANGE_MODES,
+    RELAX_IMPLS,
     EngineConfig,
     run_distributed,
     make_engine,
@@ -44,13 +53,15 @@ from repro.core.frontier import (
 from repro.core.metrics import WorkMetrics, model_time_s
 
 __all__ = [
-    "Chaotic", "Dijkstra", "DeltaStepping", "KLA", "Ordering",
-    "make_ordering", "SSSP", "BFS", "CC", "SSWP", "ProcessingFn",
+    "Chaotic", "Dijkstra", "DeltaStepping", "KLA", "TopK", "Ordering",
+    "make_ordering", "ordering_kinds", "register_ordering",
+    "SSSP", "BFS", "CC", "SSWP", "ProcessingFn",
     "AGM", "sssp_agm", "run_logical", "dijkstra_reference",
+    "Hierarchy", "LEVELS", "as_hierarchy", "make_hierarchy",
     "EAGMPolicy", "make_policy", "paper_variant_grid",
     "paper_variant_specs",
-    "EXCHANGE_MODES", "EngineConfig", "run_distributed", "make_engine",
-    "initial_state", "sssp_sources", "cc_sources",
+    "EXCHANGE_MODES", "RELAX_IMPLS", "EngineConfig", "run_distributed",
+    "make_engine", "initial_state", "sssp_sources", "cc_sources",
     "compact_rows", "frontier_caps", "sparse_payload", "unpack_combine",
     "WorkMetrics", "model_time_s",
 ]

@@ -12,33 +12,74 @@ GLOBAL → PROCESS(node) → NUMA → THREAD maps onto a TPU pod cluster as
 
     GLOBAL → POD → DEVICE (chip) → CHUNK (VMEM-resident top-B prefix)
 
-and the paper's variant names keep their meaning:
+The central value type is :class:`Hierarchy`: an ordered list of
+``(level, Ordering)`` annotations over ``LEVELS``, outermost first.
+ANY ordering (chaotic / dijkstra / delta / kla / topk) may annotate
+any level, and several levels may be annotated simultaneously — e.g.
+Δ-stepping at GLOBAL refined by Dijkstra at POD refined by a finer Δ
+at CHUNK::
+
+    Hierarchy.from_spec("delta:5 > pod:dijkstra > chunk:delta:1")
+
+The level determines which collective realizes the annotation's
+equivalence-class decision (its *scope*):
+
+    global  pmin over every mesh axis (the AGM root decision)
+    pod     pmin over the intra-pod axes only (cheaper than global)
+    device  device-local reduction, no communication
+    chunk   device-local; a TopK annotation drains the B smallest
+            workitems (the VMEM-resident prefix), a class ordering
+            selects its locally-minimal class
+
+Lower level ⇒ less synchronization — the paper's core performance
+knob.  The EAGM *extension condition* (root equivalence classes must
+be preserved) is structural here: annotations refine eligibility
+strictly inside the previous level's selection, so validation only
+needs the root to sit at GLOBAL and levels to nest outermost →
+innermost.
+
+The paper's variant names are presets over this algebra:
 
     buffer   — root ordering only (the plain AGM)
-    nodeq    — Dijkstra ordering at PROCESS level → POD scope here
-    numaq    — Dijkstra ordering at NUMA level → DEVICE scope here
-    threadq  — Dijkstra ordering at THREAD level → CHUNK scope here
-               (each device drains the B smallest pending items of the
-               current root class, like a thread-local priority queue)
+    nodeq    — Dijkstra at POD       (paper: PROCESS level)
+    numaq    — Dijkstra at DEVICE    (paper: NUMA level)
+    threadq  — TopK(B) at CHUNK      (paper: THREAD level; each device
+               drains the B smallest pending items of the current
+               root class, like a thread-local priority queue)
 
-The scope tells the distributed engine which collective implements the
-sub-ordering decision: POD needs a pod-internal pmin (cheaper than
-global), DEVICE needs a local reduction only, CHUNK needs a local
-top-B only.  Lower level ⇒ less synchronization — the paper's core
-performance knob.
+``EAGMPolicy`` / ``make_policy`` (the pre-hierarchy one-slot API)
+remain as thin deprecation shims constructing equivalent hierarchies.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Tuple, Union
 
-from repro.core.ordering import Ordering, Dijkstra, make_ordering
+from repro.core.ordering import (
+    Dijkstra,
+    Ordering,
+    TopK,
+    make_ordering,
+    needs_level,
+    suggest,
+)
 
 # spatial levels, outermost to innermost
 LEVELS = ("global", "pod", "device", "chunk")
 
-# paper variant name -> spatial level carrying the <_dj sub-ordering
+#: levels whose decision is a device-local computation (no collective)
+LOCAL_LEVELS = ("device", "chunk")
+
+#: human description of the collective realizing each level's decision
+LEVEL_SCOPE = {
+    "global": "pmin over all mesh axes",
+    "pod": "pmin over intra-pod axes",
+    "device": "device-local reduction",
+    "chunk": "device-local top-B drain",
+}
+
+# paper variant name -> spatial level carrying the sub-root annotation
 VARIANT_LEVEL = {
     "buffer": None,
     "nodeq": "pod",
@@ -46,10 +87,238 @@ VARIANT_LEVEL = {
     "threadq": "chunk",
 }
 
+DEFAULT_CHUNK = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """An EAGM: ordered ``(level, Ordering)`` annotations, outermost
+    (GLOBAL — the AGM root) first.
+
+    Validation enforces the EAGM extension condition's structural
+    form: exactly one GLOBAL annotation, in first position; levels
+    strictly outermost → innermost with no duplicates (so every
+    annotation refines *within* the classes of the one above it, and
+    the root classes are preserved); TopK (a drain, not a class
+    selection) only at the local levels where a top-B is collective-
+    free.
+    """
+
+    annotations: Tuple[Tuple[str, Ordering], ...]
+
+    def __post_init__(self):
+        annos = tuple(
+            (lvl, o) if not isinstance(o, str) else (lvl, make_ordering(o))
+            for lvl, o in self.annotations
+        )
+        object.__setattr__(self, "annotations", annos)
+        if not annos:
+            raise ValueError("Hierarchy needs at least the root annotation")
+        for lvl, o in annos:
+            if lvl not in LEVELS:
+                raise ValueError(
+                    f"bad spatial level {lvl!r} — must be one of "
+                    f"{list(LEVELS)}{suggest(str(lvl), LEVELS)}"
+                )
+        if annos[0][0] != "global":
+            raise ValueError(
+                "the first annotation must sit at the 'global' level — it "
+                "is the AGM root ordering whose equivalence classes the "
+                f"EAGM must preserve (got {annos[0][0]!r})"
+            )
+        order = [LEVELS.index(lvl) for lvl, _ in annos]
+        if any(b <= a for a, b in zip(order, order[1:])):
+            raise ValueError(
+                "annotations must nest one per level, outermost to "
+                f"innermost {list(LEVELS)}; got levels "
+                f"{[lvl for lvl, _ in annos]}"
+            )
+        for lvl, o in annos:
+            if isinstance(o, TopK) and lvl not in LOCAL_LEVELS:
+                raise ValueError(
+                    f"TopK is a device-local drain and cannot annotate "
+                    f"{lvl!r} — use it at one of {list(LOCAL_LEVELS)}, or "
+                    "annotate this level with a class ordering"
+                )
+
+    # -- structure -----------------------------------------------------
+
+    @property
+    def root(self) -> Ordering:
+        """The GLOBAL (AGM root) ordering."""
+        return self.annotations[0][1]
+
+    @property
+    def sub(self) -> Tuple[Tuple[str, Ordering], ...]:
+        """The sub-root annotations, outermost first."""
+        return self.annotations[1:]
+
+    @property
+    def needs_level(self) -> bool:
+        """True iff any annotation reads the KLA level attribute."""
+        return any(needs_level(o) for _, o in self.annotations)
+
+    def at(self, level: str) -> Optional[Ordering]:
+        for lvl, o in self.annotations:
+            if lvl == level:
+                return o
+        return None
+
+    # -- construction --------------------------------------------------
+
+    @classmethod
+    def single(cls, root: Union[str, Ordering]) -> "Hierarchy":
+        """The plain AGM: a root ordering and nothing below it."""
+        return cls((("global", root),))
+
+    @classmethod
+    def from_spec(
+        cls, spec: str, chunk_size: int = DEFAULT_CHUNK
+    ) -> "Hierarchy":
+        """Parse the hierarchy grammar: ``>``-separated annotations,
+        outermost first; the first is the bare root ordering spec (an
+        explicit ``global:`` prefix is allowed), later ones are
+        ``level:ordering``::
+
+            "delta:5 > pod:dijkstra > chunk:delta:1"
+            "chaotic > chunk:topk:64"
+
+        ``chunk_size`` supplies B for a bare ``chunk:topk`` (no drain
+        size given).  The legacy preset form ``root+variant`` is also
+        accepted, so ``Hierarchy.from_spec(h.name) == h`` for every
+        hierarchy.
+        """
+        s = str(spec).strip()
+        if "+" in s and ">" not in s:
+            root, variant = s.split("+", 1)
+            root, variant = root.strip(), variant.strip()
+            if not root or not variant:
+                raise ValueError(
+                    f"empty {'variant' if root else 'root'} segment in "
+                    f"spec {spec!r}"
+                )
+            return make_hierarchy(root, variant, chunk_size)
+        segments = [seg.strip() for seg in str(spec).split(">")]
+        if any(not seg for seg in segments):
+            raise ValueError(
+                f"empty annotation segment in hierarchy spec {spec!r}"
+            )
+        annos = []
+        for i, seg in enumerate(segments):
+            head = seg.split(":", 1)[0].strip().lower()
+            if head in LEVELS:
+                if ":" not in seg:
+                    raise ValueError(
+                        f"annotation {seg!r} in {spec!r} names level "
+                        f"{head!r} but no ordering (expected "
+                        "'level:ordering')"
+                    )
+                lvl, rest = seg.split(":", 1)
+                lvl, rest = lvl.strip().lower(), rest.strip()
+            elif i == 0:
+                lvl, rest = "global", seg
+            else:
+                raise ValueError(
+                    f"annotation {seg!r} in hierarchy spec {spec!r} must "
+                    f"be 'level:ordering' with level in {list(LEVELS)}"
+                    f"{suggest(head, LEVELS)}"
+                )
+            ordering = (
+                TopK(chunk_size) if rest.lower() == "topk"
+                else make_ordering(rest)
+            )
+            annos.append((lvl, ordering))
+        return cls(tuple(annos))
+
+    # -- naming --------------------------------------------------------
+
+    @property
+    def spec(self) -> str:
+        """Canonical grammar-v2 string; ``from_spec(h.spec) == h``."""
+        parts = [self.root.spec]
+        parts += [f"{lvl}:{o.spec}" for lvl, o in self.sub]
+        return " > ".join(parts)
+
+    @property
+    def variant(self) -> Optional[str]:
+        """The paper preset name this hierarchy realizes, or None if
+        it is a beyond-paper family point."""
+        for variant, lvl in VARIANT_LEVEL.items():
+            if self == make_hierarchy(self.root, variant,
+                                      chunk_size=self._preset_chunk()):
+                return variant
+        return None
+
+    def _preset_chunk(self) -> int:
+        o = self.at("chunk")
+        return o.drain if isinstance(o, TopK) else DEFAULT_CHUNK
+
+    @property
+    def name(self) -> str:
+        v = self.variant
+        if v is not None and self._preset_chunk() == DEFAULT_CHUNK:
+            return f"{self.root.spec}+{v}"
+        return self.spec
+
+    def describe(self) -> str:
+        """One line per annotation with its collective scope."""
+        def scope(lvl, o):
+            if lvl in LOCAL_LEVELS and isinstance(o, TopK):
+                return f"device-local top-{o.drain} drain"
+            if lvl in LOCAL_LEVELS:
+                return "device-local minimal class"
+            return LEVEL_SCOPE[lvl]
+
+        return "; ".join(
+            f"{lvl}: {o.spec} ({scope(lvl, o)})"
+            for lvl, o in self.annotations
+        )
+
+
+def make_hierarchy(
+    root: Union[str, Ordering],
+    variant: str = "buffer",
+    chunk_size: int = DEFAULT_CHUNK,
+) -> Hierarchy:
+    """The paper's Fig. 4 presets as hierarchies:
+    ``make_hierarchy('delta:5', 'threadq')``."""
+    if variant not in VARIANT_LEVEL:
+        raise ValueError(
+            f"variant must be one of {sorted(VARIANT_LEVEL)}, got "
+            f"{variant!r}{suggest(str(variant), VARIANT_LEVEL)}"
+        )
+    if isinstance(root, str):
+        root = make_ordering(root)
+    annos = [("global", root)]
+    lvl = VARIANT_LEVEL[variant]
+    if lvl == "chunk":
+        annos.append(("chunk", TopK(chunk_size)))
+    elif lvl is not None:
+        annos.append((lvl, Dijkstra()))
+    return Hierarchy(tuple(annos))
+
+
+def as_hierarchy(h) -> Hierarchy:
+    """Coerce a Hierarchy | EAGMPolicy | spec string."""
+    if isinstance(h, Hierarchy):
+        return h
+    if isinstance(h, EAGMPolicy):
+        return h.hierarchy
+    if isinstance(h, str):
+        return Hierarchy.from_spec(h)
+    raise TypeError(f"cannot interpret {h!r} as a Hierarchy")
+
+
+# ---------------------------------------------------------------------
+# deprecation shims: the pre-hierarchy one-slot variant API
+# ---------------------------------------------------------------------
+
 
 @dataclasses.dataclass(frozen=True)
 class EAGMPolicy:
-    """Root ordering + (at most one) sub-root Dijkstra annotation.
+    """Deprecated one-slot API: root ordering + (at most one) sub-root
+    Dijkstra annotation.  Kept as a shim; the engine consumes the
+    equivalent :class:`Hierarchy` (``.hierarchy``).
 
     ``sub_level=None`` is the plain AGM (= the paper's `buffer`).
     ``chunk_size`` is B, the drain size for chunk-level ordering.
@@ -58,11 +327,24 @@ class EAGMPolicy:
     root: Ordering
     sub_level: Optional[str] = None  # 'pod' | 'device' | 'chunk' | None
     sub_ordering: Ordering = Dijkstra()
-    chunk_size: int = 1024
+    chunk_size: int = DEFAULT_CHUNK
 
     def __post_init__(self):
         if self.sub_level is not None and self.sub_level not in LEVELS[1:]:
             raise ValueError(f"bad spatial level {self.sub_level!r}")
+
+    @property
+    def hierarchy(self) -> Hierarchy:
+        """The equivalent per-level hierarchy (chunk-level Dijkstra
+        draining is ``TopK(chunk_size)``, exactly the old behavior)."""
+        annos = [("global", self.root)]
+        if self.sub_level == "chunk":
+            annos.append(
+                ("chunk", TopK(self.chunk_size, key=self.sub_ordering))
+            )
+        elif self.sub_level is not None:
+            annos.append((self.sub_level, self.sub_ordering))
+        return Hierarchy(tuple(annos))
 
     @property
     def variant(self) -> str:
@@ -77,12 +359,15 @@ class EAGMPolicy:
 
 
 def make_policy(
-    root_spec: str, variant: str = "buffer", chunk_size: int = 1024
+    root_spec: str, variant: str = "buffer", chunk_size: int = DEFAULT_CHUNK
 ) -> EAGMPolicy:
-    """E.g. make_policy('delta:5', 'threadq') — the paper's Fig. 4 grid."""
+    """Deprecated shim for the paper's Fig. 4 grid; prefer
+    :func:`make_hierarchy` (e.g. ``make_hierarchy('delta:5',
+    'threadq')``) or the spec grammar."""
     if variant not in VARIANT_LEVEL:
         raise ValueError(
-            f"variant must be one of {sorted(VARIANT_LEVEL)}, got {variant!r}"
+            f"variant must be one of {sorted(VARIANT_LEVEL)}, got "
+            f"{variant!r}{suggest(str(variant), VARIANT_LEVEL)}"
         )
     return EAGMPolicy(
         root=make_ordering(root_spec),
@@ -91,13 +376,20 @@ def make_policy(
     )
 
 
+# ---------------------------------------------------------------------
+# the paper's evaluation grid
+# ---------------------------------------------------------------------
+
+
 def paper_variant_specs(
     deltas=(3.0, 5.0, 7.0), ks=(1, 2, 3)
-) -> list[str]:
+) -> list:
     """The paper's evaluation grid as ``root+variant`` spec strings:
     {Δ-stepping, KLA, Chaotic} × {buffer, threadq, nodeq, numaq}
     (Figures 5-7), with the Δ and K sweeps of the experiments, plus
-    the Dijkstra AGM baseline."""
+    the Dijkstra AGM baseline.  Every string parses (legacy grammar)
+    to a preset hierarchy — the grid is a finite subset of the family
+    space :class:`Hierarchy` spans."""
     roots = (
         [f"delta:{d:g}" for d in deltas]
         + [f"kla:{k}" for k in ks]
@@ -113,11 +405,11 @@ def paper_variant_specs(
 
 
 def paper_variant_grid(
-    deltas=(3.0, 5.0, 7.0), ks=(1, 2, 3), chunk_size: int = 1024
-) -> list[EAGMPolicy]:
-    """:func:`paper_variant_specs` materialized as policies."""
-    grid: list[EAGMPolicy] = []
+    deltas=(3.0, 5.0, 7.0), ks=(1, 2, 3), chunk_size: int = DEFAULT_CHUNK
+) -> list:
+    """:func:`paper_variant_specs` materialized as hierarchies."""
+    grid = []
     for spec in paper_variant_specs(deltas, ks):
         root, variant = spec.split("+", 1)
-        grid.append(make_policy(root, variant, chunk_size))
+        grid.append(make_hierarchy(root, variant, chunk_size))
     return grid

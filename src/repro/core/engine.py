@@ -14,12 +14,14 @@ workitems are a *dense frontier*: per owned vertex v the device keeps
 
 One loop iteration = one superstep:
 
-  1. class keys of pending workitems under the ROOT ordering; global
-     pmin ⇒ the current smallest equivalence class (AGM semantics).
-  2. EAGM sub-ordering refines eligibility *within* the root class at
-     a spatial scope: pod (pmin over intra-pod axes), device (local
-     reduction only) or chunk (local top-B) — less synchronization at
-     lower levels, the paper's §IV knob.
+  1.+2. fold over the EAGM ordering hierarchy (core/eagm.py): the
+     GLOBAL annotation is the AGM root (global pmin of class keys ⇒
+     the current smallest equivalence class); every further
+     annotation refines eligibility *within* the selection above it
+     at its spatial scope — pod (pmin over intra-pod axes), device
+     (local reduction only), or a TopK drain (local top-B).  One code
+     path realizes every family member; less synchronization at lower
+     levels, the paper's §IV knob.
   3. commit eligible workitems (atomic in the dataflow sense),
   4. relax their out-edges (ELL min-plus, fat rows pre-chunked),
   5. exchange candidates to owners: paper-faithful baseline = dense
@@ -68,9 +70,9 @@ from repro.core.frontier import (
     sparse_payload,
     unpack_combine,
 )
-from repro.core.eagm import EAGMPolicy
+from repro.core.eagm import EAGMPolicy, Hierarchy, as_hierarchy
 from repro.core.metrics import WorkMetrics
-from repro.core.ordering import needs_level
+from repro.core.ordering import suggest
 from repro.core.processing import ProcessingFn, SSSP
 from repro.graph.partition import PartitionedGraph
 
@@ -87,9 +89,16 @@ INF = jnp.float32(jnp.inf)
 EXCHANGE_MODES = ("a2a", "pmin", "sparse", "auto")
 
 
+#: valid relaxation backends for the sparse push path
+RELAX_IMPLS = ("ref", "pallas", "pallas_interpret")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    policy: EAGMPolicy
+    # the EAGM ordering hierarchy; a legacy EAGMPolicy or a spec
+    # string is accepted and normalized to a Hierarchy, so equality /
+    # the engine cache key see one canonical form
+    policy: "Hierarchy | EAGMPolicy | str"
     processing: ProcessingFn = SSSP
     exchange: str = "a2a"
     max_iters: int = 10**9
@@ -104,12 +113,24 @@ class EngineConfig:
     relax_impl: str = "ref"
 
     def __post_init__(self):
+        object.__setattr__(self, "policy", as_hierarchy(self.policy))
         if self.exchange not in EXCHANGE_MODES:
-            raise ValueError(self.exchange)
+            raise ValueError(
+                f"exchange must be one of {EXCHANGE_MODES}, got "
+                f"{self.exchange!r}{suggest(str(self.exchange), EXCHANGE_MODES)}"
+            )
         if self.frontier_cap is not None and self.frontier_cap <= 0:
             raise ValueError(f"frontier_cap must be positive: {self.frontier_cap}")
-        if self.relax_impl not in ("ref", "pallas", "pallas_interpret"):
-            raise ValueError(self.relax_impl)
+        if self.relax_impl not in RELAX_IMPLS:
+            raise ValueError(
+                f"relax_impl must be one of {RELAX_IMPLS}, got "
+                f"{self.relax_impl!r}{suggest(str(self.relax_impl), RELAX_IMPLS)}"
+            )
+
+    @property
+    def hierarchy(self) -> Hierarchy:
+        """The normalized ordering hierarchy (alias of ``policy``)."""
+        return self.policy
 
 
 def _flat_rank(axis_names, mesh_shape):
@@ -133,8 +154,8 @@ def build_step(
 ):
     """Build the shard_map-inner superstep body + loop."""
     p = cfg.processing
-    pol = cfg.policy
-    use_level = needs_level(pol.root)
+    hier = cfg.hierarchy
+    use_level = hier.needs_level
     is_min = p.reduce is jnp.minimum
     worst = jnp.float32(p.worst)
     n_pad = n_parts * n_local
@@ -179,24 +200,33 @@ def build_step(
             # capacity-overflow veto catch the bursty supersteps
             auto_thresh = max(1, (n_parts * n_local) // 2)
 
-        # ---- 1. root ordering: current global minimal class ----------
+        # ---- 1+2. ordering hierarchy: fold over annotations ----------
+        # Each annotation refines eligibility strictly *within* the
+        # previous level's selection (the EAGM extension condition),
+        # using the cheapest collective its spatial scope allows:
+        # global/pod -> pmin over the scope's mesh axes, device ->
+        # local reduction, drain (TopK) -> local top-B.  The first
+        # annotation is the AGM root; its class key feeds the
+        # distinct-classes metric.
         pending = p.better(T, D)
-        key = jnp.where(pending, pol.root.class_key(T, L), INF)
-        kmin = jax.lax.pmin(jnp.min(key), all_axes)
-        eligible = pending & (key == kmin)
-
-        # ---- 2. EAGM spatial sub-ordering (within root class) --------
-        if pol.sub_level is not None:
-            sub = jnp.where(eligible, pol.sub_ordering.class_key(T, L), INF)
-            if pol.sub_level == "pod":
-                smin = jax.lax.pmin(jnp.min(sub), pod_axes)
-                eligible = eligible & (sub == smin)
-            elif pol.sub_level == "device":
-                eligible = eligible & (sub == jnp.min(sub))
-            elif pol.sub_level == "chunk":
-                B = min(pol.chunk_size, n_local)
-                kth = -jax.lax.top_k(-sub, B)[0][B - 1]
-                eligible = eligible & (sub <= kth)
+        eligible = pending
+        kmin = INF
+        for lvl, o in hier.annotations:
+            key = jnp.where(eligible, o.class_key(T, L), INF)
+            if lvl in ("global", "pod"):
+                axes = all_axes if lvl == "global" else pod_axes
+                m = jnp.min(key)
+                if axes:
+                    m = jax.lax.pmin(m, axes)
+                eligible = eligible & (key == m)
+                if lvl == "global":
+                    kmin = m
+            elif getattr(o, "drain", None) is not None:  # local top-B drain
+                B = min(o.drain, n_local)
+                kth = -jax.lax.top_k(-key, B)[0][B - 1]
+                eligible = eligible & (key <= kth)
+            else:  # device/chunk minimal class, collective-free
+                eligible = eligible & (key == jnp.min(key))
 
         # ---- 3. commit (atomic monotone state update) -----------------
         D = jnp.where(eligible, T, D)

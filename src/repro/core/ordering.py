@@ -12,12 +12,27 @@ AGM semantics ("execute the smallest equivalence class; repeat").
 
 Keys are float32 so that ``pmin`` collectives implement the induced
 class ordering ``<_WIS`` directly.
+
+Every ordering satisfies one uniform protocol, so the EAGM hierarchy
+(core/eagm.py) can put any of them at any spatial level:
+
+    class_key(dist, level) -> f32 array   the equivalence-class key
+    needs_level: bool                     True iff the key reads the
+                                          KLA level attribute L
+    drain: Optional[int]                  top-B drain size (TopK only)
+    spec: str                             canonical parseable spec,
+                                          ``make_ordering(o.spec) == o``
+
+Orderings register themselves in a kind registry; ``make_ordering``
+parses specs through it and offers a did-you-mean suggestion on
+unknown kinds.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+import difflib
+from typing import Callable, Optional, Union
 
 import jax.numpy as jnp
 
@@ -29,6 +44,12 @@ class Chaotic:
     """Definition 5: w1 <_chaotic w2 is always False — one giant class."""
 
     name: str = "chaotic"
+    needs_level = False
+    drain = None
+
+    @property
+    def spec(self) -> str:
+        return "chaotic"
 
     def class_key(self, dist, level):
         return jnp.zeros_like(dist)
@@ -39,6 +60,12 @@ class Dijkstra:
     """Definition 6: w1 <_dj w2 iff d1 < d2 — one class per distance."""
 
     name: str = "dijkstra"
+    needs_level = False
+    drain = None
+
+    @property
+    def spec(self) -> str:
+        return "dijkstra"
 
     def class_key(self, dist, level):
         return dist
@@ -49,10 +76,16 @@ class DeltaStepping:
     """Definition 7: w1 <_Δ w2 iff ⌊d1/Δ⌋ < ⌊d2/Δ⌋."""
 
     delta: float = 5.0
+    needs_level = False
+    drain = None
 
     @property
     def name(self) -> str:
         return f"delta{self.delta:g}"
+
+    @property
+    def spec(self) -> str:
+        return f"delta:{self.delta:g}"
 
     def class_key(self, dist, level):
         return jnp.floor(dist / jnp.float32(self.delta))
@@ -63,10 +96,15 @@ class KLA:
     """Definition 9: w1 <_kla w2 iff ⌊l1/k⌋ < ⌊l2/k⌋ (level attribute)."""
 
     k: int = 2
+    drain = None
 
     @property
     def name(self) -> str:
         return f"kla{self.k}"
+
+    @property
+    def spec(self) -> str:
+        return f"kla:{self.k}"
 
     @property
     def needs_level(self) -> bool:
@@ -76,26 +114,132 @@ class KLA:
         return jnp.floor(level.astype(jnp.float32) / jnp.float32(self.k))
 
 
-Ordering = Union[Chaotic, Dijkstra, DeltaStepping, KLA]
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    """Drain ordering: keep the B smallest workitems under ``key``.
+
+    Unlike the class orderings above, a TopK annotation does not select
+    one equivalence class — it bounds *how many* workitems a local
+    scope drains per superstep (the B smallest by ``key``'s class key,
+    ties included).  This is the paper's thread-level priority-queue
+    behavior: ``threadq`` is ``TopK(b)`` with the Dijkstra key at the
+    CHUNK level (each device drains the B smallest pending items of
+    the current root class).  Only meaningful at the device-local
+    scopes (device, chunk) — a distributed top-B would need a
+    collective k-selection.
+    """
+
+    b: int = 1024
+    key: Union[Chaotic, Dijkstra, DeltaStepping, KLA] = Dijkstra()
+
+    def __post_init__(self):
+        if self.b <= 0:
+            raise ValueError(f"TopK drain size must be positive: {self.b}")
+        if isinstance(self.key, TopK):
+            raise ValueError("TopK cannot nest another TopK as its key")
+
+    @property
+    def name(self) -> str:
+        inner = "" if isinstance(self.key, Dijkstra) else f"[{self.key.name}]"
+        return f"topk{self.b}{inner}"
+
+    @property
+    def spec(self) -> str:
+        if isinstance(self.key, Dijkstra):
+            return f"topk:{self.b}"
+        return f"topk:{self.b}:{self.key.spec}"
+
+    @property
+    def needs_level(self) -> bool:
+        return needs_level(self.key)
+
+    @property
+    def drain(self) -> int:
+        return self.b
+
+    def class_key(self, dist, level):
+        return self.key.class_key(dist, level)
+
+
+Ordering = Union[Chaotic, Dijkstra, DeltaStepping, KLA, TopK]
 
 
 def needs_level(ordering: Ordering) -> bool:
     return getattr(ordering, "needs_level", False)
 
 
+# ---------------------------------------------------------------------
+# registry + spec parsing
+# ---------------------------------------------------------------------
+
+#: canonical kind -> (parser(arg_str_or_None) -> Ordering)
+_REGISTRY: "dict[str, Callable[[Optional[str]], Ordering]]" = {}
+#: alias -> canonical kind
+_ALIASES: "dict[str, str]" = {}
+
+
+def register_ordering(kind: str, parser, *aliases: str) -> None:
+    """Register an ordering kind for :func:`make_ordering`.  ``parser``
+    receives the text after ``kind:`` (or None) and returns the
+    ordering instance."""
+    _REGISTRY[kind] = parser
+    _ALIASES[kind] = kind
+    for a in aliases:
+        _ALIASES[a] = kind
+
+
+def _parse_topk(arg: Optional[str]) -> TopK:
+    if arg is None:
+        return TopK()
+    if ":" in arg:  # topk:B:inner-ordering-spec
+        b, inner = arg.split(":", 1)
+        return TopK(int(b), make_ordering(inner))
+    return TopK(int(arg))
+
+
+register_ordering("chaotic", lambda a: Chaotic())
+register_ordering("dijkstra", lambda a: Dijkstra(), "dj")
+register_ordering(
+    "delta",
+    lambda a: DeltaStepping(float(a) if a else 5.0),
+    "delta-stepping", "ds",
+)
+register_ordering("kla", lambda a: KLA(int(a) if a else 2))
+register_ordering("topk", _parse_topk)
+
+
+def ordering_kinds() -> tuple:
+    """The registered canonical ordering kinds."""
+    return tuple(sorted(_REGISTRY))
+
+
+def suggest(word: str, choices) -> str:
+    """``" (did you mean 'x'?)"`` when a close match exists, else ""."""
+    close = difflib.get_close_matches(word, list(choices), n=1, cutoff=0.6)
+    return f" (did you mean {close[0]!r}?)" if close else ""
+
+
 def make_ordering(spec: str) -> Ordering:
-    """Parse 'chaotic' | 'dijkstra' | 'delta:5' | 'kla:2'."""
-    if ":" in spec:
+    """Parse 'chaotic' | 'dijkstra' | 'delta:5' | 'kla:2' | 'topk:64'
+    (or 'topk:64:delta:1' for a non-Dijkstra drain key)."""
+    if isinstance(spec, str) and ":" in spec:
         kind, arg = spec.split(":", 1)
     else:
         kind, arg = spec, None
-    kind = kind.strip().lower()
-    if kind == "chaotic":
-        return Chaotic()
-    if kind in ("dijkstra", "dj"):
-        return Dijkstra()
-    if kind in ("delta", "delta-stepping", "ds"):
-        return DeltaStepping(float(arg) if arg else 5.0)
-    if kind == "kla":
-        return KLA(int(arg) if arg else 2)
-    raise ValueError(f"unknown ordering spec: {spec!r}")
+    kind = str(kind).strip().lower()
+    canonical = _ALIASES.get(kind)
+    if canonical is None:
+        raise ValueError(
+            f"unknown ordering spec: {spec!r} — kind must be one of "
+            f"{sorted(_REGISTRY)}{suggest(kind, _ALIASES)}"
+        )
+    try:
+        return _REGISTRY[canonical](arg)
+    except (TypeError, ValueError) as e:
+        # already-informative parse errors (incl. from a recursive
+        # make_ordering on a nested TopK key) pass through unwrapped
+        if isinstance(e, ValueError) and str(e).startswith(
+            ("unknown ordering spec", "bad argument in ordering spec")
+        ):
+            raise
+        raise ValueError(f"bad argument in ordering spec {spec!r}: {e}")

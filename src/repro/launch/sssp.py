@@ -4,8 +4,13 @@ against Dijkstra, report work/sync metrics and cost-model time.
 
     PYTHONPATH=src python -m repro.launch.sssp --graph rmat1 --scale 14 \
         --spec delta:5+threadq/a2a
+    # a composed per-level hierarchy (grammar v2):
+    PYTHONPATH=src python -m repro.launch.sssp \
+        --spec "delta:5 > pod:dijkstra > chunk:delta:1 /sparse"
     # batched query serving (one engine invocation for all sources):
     PYTHONPATH=src python -m repro.launch.sssp --sources 0 7 42
+    # the family space at a glance:
+    PYTHONPATH=src python -m repro.launch.sssp --list-variants
 
 The old --root/--variant/--exchange flags still work and are folded
 into the spec.
@@ -37,14 +42,55 @@ def build_graph(kind: str, scale: int, seed: int):
     raise SystemExit(f"unknown graph kind {kind}")
 
 
+#: example beyond-paper hierarchies shown by --list-variants
+EXAMPLE_HIERARCHIES = [
+    "delta:5 > pod:dijkstra",
+    "delta:5 > pod:dijkstra > chunk:delta:1",
+    "delta:7 > pod:delta:3 > chunk:topk:64",
+    "chaotic > device:dijkstra > chunk:topk:32",
+    "kla:2 > pod:dijkstra > device:dijkstra",
+]
+
+
+def list_variants_lines() -> list:
+    """The preset (paper) grid plus example composed hierarchies, each
+    with the collective scope realizing every annotation."""
+    from repro.api import SolverConfig
+    from repro.core import paper_variant_specs
+
+    lines = ["preset grid (paper Figures 5-7, legacy grammar "
+             "root+variant):"]
+    for spec in paper_variant_specs():
+        cfg = SolverConfig.from_spec(spec)
+        lines.append(f"  {cfg.name:26s} {cfg.hierarchy.describe()}")
+    lines.append("")
+    lines.append("example composed hierarchies (grammar v2: "
+                 "'root > level:ordering > ...[/exchange]'):")
+    for spec in EXAMPLE_HIERARCHIES:
+        cfg = SolverConfig.from_spec(spec)
+        lines.append(f"  {spec:44s} {cfg.hierarchy.describe()}")
+    lines.append("")
+    lines.append("levels: global > pod > device > chunk; orderings: "
+                 "chaotic | dijkstra | delta:D | kla:K | topk:B; "
+                 "exchange: a2a | pmin | sparse | auto")
+    return lines
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="rmat1",
                     choices=["rmat1", "rmat2", "road", "smallworld"])
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--spec", default=None,
-                    help="solver spec root[+variant][/exchange], "
-                         "e.g. delta:5+threadq/a2a or dijkstra/sparse")
+                    help="solver spec: legacy 'root[+variant][/exchange]' "
+                         "(e.g. delta:5+threadq/a2a) or a hierarchy "
+                         "'root > level:ordering > ...[/exchange]' "
+                         "(e.g. 'delta:5 > pod:dijkstra > chunk:delta:1"
+                         "/sparse')")
+    ap.add_argument("--list-variants", action="store_true",
+                    help="enumerate the preset grid + example composed "
+                         "hierarchies with their collective scopes, "
+                         "then exit")
     ap.add_argument("--root", default="delta:5")
     ap.add_argument("--variant", default="buffer",
                     choices=["buffer", "threadq", "nodeq", "numaq"])
@@ -59,6 +105,11 @@ def main() -> None:
                     choices=["sssp", "bfs", "cc", "sswp"],
                     help="processing function (all share the engine)")
     args = ap.parse_args()
+
+    if args.list_variants:
+        for line in list_variants_lines():
+            print(line)
+        return
 
     from repro.api import (
         EveryVertex, Problem, SingleSource, Solver, SolverConfig,

@@ -190,6 +190,77 @@ def test_sparse_exchange_8_devices():
     assert "SPARSE-MULTIDEV-OK" in r.stdout
 
 
+CHILD_HIER = r"""
+import numpy as np, jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference
+from repro.graph import rmat1
+
+g = rmat1(9, seed=5)
+ref = dijkstra_reference(g, 0)
+mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+
+def close(a, b):
+    return np.allclose(np.where(np.isinf(a), -1, a),
+                       np.where(np.isinf(b), -1, b))
+
+# multi-level hierarchies on a mesh where pod/device/chunk scopes are
+# genuinely distinct; each vs the reference solver, across exchanges
+HIERS = [
+    'delta:20 > pod:dijkstra > chunk:delta:1',
+    'delta:20 > pod:delta:5 > device:dijkstra > chunk:topk:16',
+    'chaotic > device:dijkstra > chunk:topk:8',
+    'kla:2 > pod:dijkstra',
+]
+mets = {}
+for spec in HIERS:
+    for ex in ['a2a', 'pmin', 'sparse']:
+        cfg = SolverConfig.from_spec(spec, exchange=ex, frontier_cap=8)
+        sol = Solver(cfg, mesh=mesh).solve(Problem(g, SingleSource(0)))
+        assert close(ref, sol.state), (spec, ex)
+        mets[(spec, ex)] = sol.metrics
+    # exchange modes keep identical schedules on hierarchies too
+    assert mets[(spec, 'a2a')].supersteps == mets[(spec, 'pmin')].supersteps
+    assert mets[(spec, 'sparse')].supersteps == mets[(spec, 'a2a')].supersteps
+    assert mets[(spec, 'sparse')].relaxations == mets[(spec, 'a2a')].relaxations
+
+# refinement narrows per-superstep work: the 2-level point does no
+# more relaxations (and no fewer supersteps) than its root alone
+base = Solver(SolverConfig.from_spec('delta:20'), mesh=mesh).solve(
+    Problem(g, SingleSource(0))).metrics
+ref2 = mets[('delta:20 > pod:dijkstra > chunk:delta:1', 'a2a')]
+assert ref2.relaxations <= base.relaxations
+assert ref2.supersteps >= base.supersteps
+
+# legacy preset == equivalent hierarchy spec, bit-identical states
+a = Solver('delta:20+nodeq', mesh=mesh).solve(Problem(g, SingleSource(0)))
+b = Solver('delta:20 > pod:dijkstra', mesh=mesh).solve(
+    Problem(g, SingleSource(0)))
+assert np.array_equal(a.state, b.state)
+assert a.metrics.supersteps == b.metrics.supersteps
+print('HIER-MULTIDEV-OK')
+"""
+
+
+@pytest.mark.slow
+def test_hierarchy_8_devices():
+    """Composed per-level hierarchies on an 8-device (pod, data,
+    model) mesh: correct vs the reference solver, identical schedules
+    across exchange modes, refinement monotonicity, and legacy-preset
+    equivalence."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", CHILD_HIER], env=env,
+        capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "HIER-MULTIDEV-OK" in r.stdout
+
+
 CHILD_LM = r"""
 import numpy as np, jax, jax.numpy as jnp
 assert len(jax.devices()) == 8

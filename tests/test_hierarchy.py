@@ -1,0 +1,384 @@
+"""The hierarchical ordering algebra: per-level EAGM annotations
+(core/eagm.Hierarchy), the ordering registry + TopK drain, the spec
+grammar v2, preset/legacy equivalence, and multi-level hierarchy
+solves against the reference CPU solver.
+
+Property-based round-trip tests (hypothesis) live at the bottom and
+skip themselves when hypothesis is absent; everything else always
+runs.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import (
+    Chaotic,
+    DeltaStepping,
+    Dijkstra,
+    EngineConfig,
+    Hierarchy,
+    KLA,
+    TopK,
+    dijkstra_reference,
+    make_hierarchy,
+    make_ordering,
+    make_policy,
+    paper_variant_grid,
+    paper_variant_specs,
+)
+from repro.graph.formats import Graph
+
+
+def close(a, b):
+    return np.allclose(
+        np.where(np.isinf(a), -1, a), np.where(np.isinf(b), -1, b)
+    )
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+# ----------------------------------------------------- ordering registry
+
+
+def test_ordering_spec_round_trips():
+    for spec in ["chaotic", "dijkstra", "delta:3", "delta:7.5", "kla:1",
+                 "kla:3", "topk:16", "topk:16:delta:3", "topk:8:chaotic"]:
+        o = make_ordering(spec)
+        assert make_ordering(o.spec) == o, spec
+
+
+def test_ordering_protocol_uniform():
+    """Every ordering exposes class_key/needs_level/drain/spec."""
+    for o in [Chaotic(), Dijkstra(), DeltaStepping(3.0), KLA(2),
+              TopK(16), TopK(16, KLA(2))]:
+        assert callable(o.class_key)
+        assert isinstance(o.needs_level, bool)
+        assert o.drain is None or o.drain > 0
+        assert isinstance(o.spec, str)
+    assert KLA(2).needs_level and TopK(4, KLA(2)).needs_level
+    assert not TopK(4).needs_level
+    assert TopK(16).drain == 16 and Dijkstra().drain is None
+
+
+def test_ordering_validation_and_did_you_mean():
+    with pytest.raises(ValueError, match="unknown ordering"):
+        make_ordering("bogus")
+    with pytest.raises(ValueError, match="did you mean 'dijkstra'"):
+        make_ordering("dikstra")
+    with pytest.raises(ValueError, match="bad argument"):
+        make_ordering("delta:abc")
+    with pytest.raises(ValueError, match="positive"):
+        TopK(0)
+    with pytest.raises(ValueError, match="nest"):
+        TopK(4, TopK(8))
+
+
+# ------------------------------------------------- hierarchy value type
+
+
+def test_hierarchy_construction_and_accessors():
+    h = Hierarchy.from_spec("delta:5 > pod:dijkstra > chunk:delta:1")
+    assert h.root == DeltaStepping(5.0)
+    assert h.sub == (("pod", Dijkstra()), ("chunk", DeltaStepping(1.0)))
+    assert h.at("pod") == Dijkstra() and h.at("device") is None
+    assert not h.needs_level
+    assert Hierarchy.from_spec("delta:5 > device:kla:2").needs_level
+    # spec strings accepted directly in annotations
+    assert Hierarchy((("global", "delta:5"),)) == Hierarchy.single("delta:5")
+
+
+def test_hierarchy_spec_round_trips():
+    for spec in [
+        "chaotic",
+        "delta:5 > pod:dijkstra",
+        "delta:5 > pod:dijkstra > chunk:delta:1",
+        "kla:2 > device:dijkstra > chunk:topk:64",
+        "dijkstra > chunk:topk:16:delta:3",
+        "global:delta:5 > pod:delta:3",
+    ]:
+        h = Hierarchy.from_spec(spec)
+        assert Hierarchy.from_spec(h.spec) == h, spec
+        assert Hierarchy.from_spec(h.name.split("/")[0]) == h, spec
+
+
+def test_hierarchy_validation():
+    # root must be global
+    with pytest.raises(ValueError, match="global"):
+        Hierarchy((("pod", Dijkstra()),))
+    # levels must nest outermost -> innermost, no duplicates
+    with pytest.raises(ValueError, match="outermost"):
+        Hierarchy.from_spec("delta:5 > chunk:delta:1 > pod:dijkstra")
+    with pytest.raises(ValueError, match="outermost"):
+        Hierarchy.from_spec("delta:5 > pod:dijkstra > pod:delta:1")
+    # TopK is local-only
+    with pytest.raises(ValueError, match="device-local"):
+        Hierarchy.from_spec("delta:5 > pod:topk:4")
+    with pytest.raises(ValueError, match="device-local"):
+        Hierarchy((("global", TopK(4)),))
+    # malformed segments
+    with pytest.raises(ValueError, match="empty annotation"):
+        Hierarchy.from_spec("delta:5 > > chunk:topk:4")
+    with pytest.raises(ValueError, match="no ordering"):
+        Hierarchy.from_spec("delta:5 > pod")
+    with pytest.raises(ValueError, match="did you mean 'pod'"):
+        Hierarchy.from_spec("delta:5 > pid:dijkstra")
+    with pytest.raises(ValueError):
+        Hierarchy(())
+
+
+def test_variant_presets_in_terms_of_hierarchies():
+    """buffer/nodeq/numaq/threadq are points of the hierarchy algebra,
+    and the legacy EAGMPolicy shim constructs exactly those points."""
+    expect = {
+        "buffer": (("global", DeltaStepping(5.0)),),
+        "nodeq": (("global", DeltaStepping(5.0)), ("pod", Dijkstra())),
+        "numaq": (("global", DeltaStepping(5.0)), ("device", Dijkstra())),
+        "threadq": (("global", DeltaStepping(5.0)), ("chunk", TopK(64))),
+    }
+    for variant, annos in expect.items():
+        h = make_hierarchy("delta:5", variant, chunk_size=64)
+        assert h.annotations == annos, variant
+        assert h.variant == variant
+        assert make_policy("delta:5", variant, 64).hierarchy == h, variant
+
+
+def test_policy_and_variant_validation():
+    with pytest.raises(ValueError, match="did you mean 'threadq'"):
+        make_hierarchy("delta:5", "threadqq")
+    with pytest.raises(ValueError, match="variant"):
+        make_policy("delta:5", "warpq")
+
+
+def test_paper_grid_is_subset_of_family_space():
+    """Every paper spec parses to a preset hierarchy: the Fig. 4 grid
+    is a finite subset of the space Hierarchy spans."""
+    specs = paper_variant_specs(deltas=(5.0,), ks=(2,))
+    grid = paper_variant_grid(deltas=(5.0,), ks=(2,))
+    assert len(specs) == len(grid) == 3 * 4 + 1  # the 13-point Fig. 4 core
+    for spec, h in zip(specs, grid):
+        assert isinstance(h, Hierarchy)
+        assert h.variant is not None, spec              # a preset point
+        cfg = SolverConfig.from_spec(spec)
+        assert cfg.hierarchy == h, spec                 # spec -> same point
+    names = {h.name for h in paper_variant_grid()}
+    assert {"chaotic+threadq", "delta:5+buffer", "dijkstra+buffer"} <= names
+
+
+# ------------------------------------------------------ config grammar
+
+
+def test_from_spec_hierarchy_grammar():
+    c = SolverConfig.from_spec("delta:5 > pod:dijkstra > chunk:delta:1 /sparse")
+    assert c.exchange == "sparse"
+    assert c.hierarchy == Hierarchy.from_spec(
+        "delta:5 > pod:dijkstra > chunk:delta:1"
+    )
+    assert c.root == "delta:5" and c.variant == "hierarchy"
+    # chunk_size flows into a bare chunk:topk
+    c = SolverConfig.from_spec("chaotic > chunk:topk", chunk_size=32)
+    assert c.hierarchy.at("chunk") == TopK(32)
+
+
+def test_legacy_and_hierarchy_forms_are_equal():
+    """The same family point is the same config (and the same engine
+    cache key) no matter which grammar spelled it."""
+    pairs = [
+        ("delta:5+buffer", "delta:5"),
+        ("kla:2+nodeq", "kla:2 > pod:dijkstra"),
+        ("chaotic+numaq", "chaotic > device:dijkstra"),
+        ("delta:5+threadq", "delta:5 > chunk:topk:1024"),
+    ]
+    for legacy, v2 in pairs:
+        a, b = SolverConfig.from_spec(legacy), SolverConfig.from_spec(v2)
+        assert a == b and hash(a) == hash(b), (legacy, v2)
+    # and at the EngineConfig layer through the EAGMPolicy shim
+    e1 = EngineConfig(policy=make_policy("delta:5", "threadq", 64))
+    e2 = EngineConfig(policy=Hierarchy.from_spec("delta:5 > chunk:topk:64"))
+    e3 = EngineConfig(policy="delta:5 > chunk:topk:64")
+    assert e1 == e2 == e3 and hash(e1) == hash(e2) == hash(e3)
+
+
+def test_name_round_trips_explicit():
+    for spec in [
+        "delta:5+threadq/pmin",
+        "kla:2+nodeq/sparse",
+        "chaotic+buffer/a2a",
+        "dijkstra+buffer/auto",
+        "delta:5 > pod:dijkstra > chunk:delta:1 /sparse",
+        "kla:2 > device:dijkstra/pmin",
+        "chaotic > chunk:topk:64/a2a",
+    ]:
+        cfg = SolverConfig.from_spec(spec)
+        assert SolverConfig.from_spec(cfg.name) == cfg, spec
+
+
+def test_name_prefers_legacy_form_for_presets():
+    assert SolverConfig.from_spec("delta:5+threadq").name \
+        == "delta:5+threadq/a2a"
+    assert SolverConfig.from_spec("delta:5 > pod:dijkstra").name \
+        == "delta:5+nodeq/a2a"
+    # non-default chunk size cannot hide in the legacy form
+    assert SolverConfig(root="delta:5", variant="threadq",
+                        chunk_size=64).name \
+        == "delta:5 > chunk:topk:64/a2a"
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "",
+        "   ",
+        "delta:5+",          # empty variant
+        "delta:5+ ",         # whitespace-only variant
+        "+threadq",          # empty root
+        "delta:5/",          # empty exchange
+        " /a2a",             # empty ordering part
+        "delta:5 > ",        # empty trailing annotation
+        "delta:5 >  > chunk:topk:4",
+        "delta:5 > pod",     # level without ordering
+    ],
+)
+def test_from_spec_rejects_malformed(bad):
+    with pytest.raises(ValueError) as ei:
+        SolverConfig.from_spec(bad)
+    assert repr(bad.strip() or bad) in str(ei.value) or "spec" in str(ei.value)
+
+
+def test_engine_config_error_messages():
+    h = Hierarchy.single("delta:5")
+    with pytest.raises(ValueError, match="exchange must be one of"):
+        EngineConfig(policy=h, exchange="rdma")
+    with pytest.raises(ValueError, match="did you mean 'sparse'"):
+        EngineConfig(policy=h, exchange="spars")
+    with pytest.raises(ValueError, match="relax_impl must be one of"):
+        EngineConfig(policy=h, relax_impl="cuda")
+    with pytest.raises(ValueError, match="did you mean 'pallas'"):
+        EngineConfig(policy=h, relax_impl="palas")
+
+
+def test_solver_config_did_you_mean():
+    with pytest.raises(ValueError, match="did you mean 'pmin'"):
+        SolverConfig(exchange="pmim")
+    with pytest.raises(ValueError, match="did you mean 'numaq'"):
+        SolverConfig(variant="numq")
+
+
+# ------------------------------------------- engine: hierarchy solves
+
+
+# genuinely new >= 2-annotation family points, inexpressible in the
+# one-slot variant API
+NEW_HIERARCHIES = [
+    "delta:5 > pod:dijkstra > chunk:delta:1",
+    "delta:7 > pod:delta:3 > chunk:topk:16",
+    "chaotic > device:dijkstra > chunk:topk:8",
+    "kla:2 > pod:dijkstra > device:dijkstra",
+    "delta:5 > pod:delta:2 > device:dijkstra > chunk:topk:4",
+]
+
+
+def _random_graph(seed, n=180, m=900):
+    rng = np.random.default_rng(seed)
+    return Graph(
+        n,
+        rng.integers(0, n, m),
+        rng.integers(0, n, m),
+        rng.uniform(0.1, 4.0, m).astype(np.float32),
+        name=f"rand{seed}",
+    )
+
+
+@pytest.mark.parametrize("spec", NEW_HIERARCHIES)
+def test_multilevel_hierarchy_matches_reference(mesh1, spec):
+    """Beyond-paper >= 2-annotation hierarchies solve SSSP correctly
+    on random graphs (vs the reference CPU Dijkstra)."""
+    for seed in (0, 1):
+        g = _random_graph(seed)
+        ref = dijkstra_reference(g, 0)
+        sol = Solver(SolverConfig.from_spec(spec), mesh=mesh1).solve(
+            Problem(g, SingleSource(0))
+        )
+        assert close(ref, sol.state), (spec, seed)
+        assert sol.metrics.converged
+
+
+@pytest.mark.parametrize("exchange", ["a2a", "sparse", "auto"])
+def test_multilevel_hierarchy_exchange_modes_bit_identical(mesh1, exchange):
+    """The sparse/auto exchange modes reproduce the dense result
+    bit-for-bit on a multi-level hierarchy (they change HOW candidates
+    move, never WHICH candidates exist)."""
+    g = _random_graph(7)
+    dense = Solver(
+        SolverConfig.from_spec(NEW_HIERARCHIES[0], exchange="a2a"),
+        mesh=mesh1,
+    ).solve(Problem(g, SingleSource(0)))
+    sol = Solver(
+        SolverConfig.from_spec(NEW_HIERARCHIES[0], exchange=exchange,
+                               frontier_cap=32),
+        mesh=mesh1,
+    ).solve(Problem(g, SingleSource(0)))
+    assert np.array_equal(dense.state, sol.state)
+    assert sol.metrics.supersteps == dense.metrics.supersteps
+
+
+def test_refinement_narrows_work(mesh1, tiny_graphs):
+    """Adding annotations only refines eligibility: a refined
+    hierarchy never relaxes more edges per superstep, and never fewer
+    supersteps, than its root alone (the paper's §IV tradeoff)."""
+    g = tiny_graphs[0]
+    base = Solver(SolverConfig.from_spec("delta:20"), mesh=mesh1).solve(
+        Problem(g, SingleSource(0))
+    )
+    refined = Solver(
+        SolverConfig.from_spec("delta:20 > device:dijkstra > chunk:topk:8"),
+        mesh=mesh1,
+    ).solve(Problem(g, SingleSource(0)))
+    assert refined.metrics.relaxations <= base.metrics.relaxations
+    assert refined.metrics.supersteps >= base.metrics.supersteps
+    ref = dijkstra_reference(g, 0)
+    assert close(ref, base.state) and close(ref, refined.state)
+
+
+def test_legacy_threadq_bit_identical_to_topk_hierarchy(mesh1, tiny_graphs):
+    """The acceptance anchor: the preset grid re-expressed on the new
+    algebra is the same engine — same config, same cache key, and a
+    solve through the EAGMPolicy shim is bit-identical to one through
+    an explicitly constructed hierarchy."""
+    g = tiny_graphs[1]
+    for root, variant in [("delta:5", "threadq"), ("kla:2", "nodeq"),
+                          ("chaotic", "numaq"), ("dijkstra", "buffer")]:
+        legacy = SolverConfig(root=root, variant=variant, chunk_size=64)
+        explicit = SolverConfig(
+            hierarchy=make_policy(root, variant, 64).hierarchy,
+            chunk_size=64,
+        )
+        assert legacy == explicit
+        a = Solver(legacy, mesh=mesh1).solve(Problem(g, SingleSource(0)))
+        b = Solver(explicit, mesh=mesh1).solve(Problem(g, SingleSource(0)))
+        assert np.array_equal(a.state, b.state), (root, variant)
+        assert a.metrics.supersteps == b.metrics.supersteps
+
+
+# ------------------------------------------------- list-variants CLI
+
+
+def test_list_variants_lines():
+    from repro.launch.sssp import list_variants_lines
+
+    lines = list_variants_lines()
+    text = "\n".join(lines)
+    assert "delta:5+threadq" in text
+    assert "pmin over intra-pod axes" in text     # scopes are explained
+    assert "delta:5 > pod:dijkstra" in text       # beyond-paper examples
+    assert len(lines) > 20
+
+
+# Property-based round-trip tests (hypothesis) live in
+# tests/test_hierarchy_property.py so this module always runs.

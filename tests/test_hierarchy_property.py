@@ -1,0 +1,69 @@
+"""Property-based spec round-tripping (satellite of the hierarchy
+redesign): for every generated config, ``SolverConfig.from_spec(
+cfg.name) == cfg`` — in the legacy ``root+variant/exchange`` grammar
+AND the hierarchy ``>`` grammar — and every ``paper_variant_specs()``
+string parses to a preset-equivalent hierarchy."""
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.api import SolverConfig
+from repro.core import Hierarchy, make_hierarchy, paper_variant_specs
+
+roots = st.sampled_from(
+    ["chaotic", "dijkstra", "delta:3", "delta:5", "delta:12.5",
+     "kla:1", "kla:3"]
+)
+variants = st.sampled_from(["buffer", "threadq", "nodeq", "numaq"])
+exchanges = st.sampled_from(["a2a", "pmin", "sparse", "auto"])
+chunks = st.sampled_from([1, 16, 64, 1024])
+class_orderings = st.sampled_from(
+    ["chaotic", "dijkstra", "delta:1", "delta:5", "kla:2"]
+)
+drains = st.sampled_from(["topk:4", "topk:64", "topk:16:delta:2"])
+
+
+@given(root=roots, variant=variants, exchange=exchanges, chunk=chunks)
+@settings(max_examples=80, deadline=None)
+def test_legacy_grammar_round_trips(root, variant, exchange, chunk):
+    cfg = SolverConfig(
+        root=root, variant=variant, exchange=exchange, chunk_size=chunk
+    )
+    assert SolverConfig.from_spec(cfg.name) == cfg
+    # parsing the explicit legacy string matches direct construction
+    assert SolverConfig.from_spec(
+        f"{root}+{variant}/{exchange}", chunk_size=chunk
+    ) == cfg
+
+
+@given(
+    root=roots,
+    pod=st.none() | class_orderings,
+    device=st.none() | class_orderings,
+    chunk=st.none() | class_orderings | drains,
+    exchange=exchanges,
+)
+@settings(max_examples=120, deadline=None)
+def test_hierarchy_grammar_round_trips(root, pod, device, chunk, exchange):
+    parts = [root]
+    for lvl, o in [("pod", pod), ("device", device), ("chunk", chunk)]:
+        if o is not None:
+            parts.append(f"{lvl}:{o}")
+    spec = " > ".join(parts) + f"/{exchange}"
+    cfg = SolverConfig.from_spec(spec)
+    assert SolverConfig.from_spec(cfg.name) == cfg, spec
+    assert cfg.hierarchy == Hierarchy.from_spec(" > ".join(parts)), spec
+
+
+@given(chunk=chunks)
+@settings(max_examples=10, deadline=None)
+def test_paper_specs_parse_to_preset_hierarchies(chunk):
+    for spec in paper_variant_specs():
+        cfg = SolverConfig.from_spec(spec, chunk_size=chunk)
+        root, variant = spec.split("+", 1)
+        assert cfg.hierarchy == make_hierarchy(root, variant, chunk), spec
+        assert SolverConfig.from_spec(cfg.name, chunk_size=chunk) == cfg

@@ -11,9 +11,11 @@ pytest.importorskip("hypothesis", reason="optional dev dependency (requirements-
 from hypothesis import given, settings, strategies as st
 
 from repro.core import make_ordering
-from repro.core.eagm import make_policy, paper_variant_grid
 
-ORDERINGS = ["chaotic", "dijkstra", "delta:3", "delta:7", "kla:1", "kla:3"]
+ORDERINGS = [
+    "chaotic", "dijkstra", "delta:3", "delta:7", "kla:1", "kla:3",
+    "topk:16", "topk:16:delta:3",
+]
 
 wi = st.tuples(
     st.floats(0, 1e6, allow_nan=False, width=32),  # distance
@@ -71,18 +73,6 @@ def test_monotone_keys_under_relaxation(w, dw):
     assert k2 >= k1
 
 
-def test_policy_grid_matches_paper():
-    grid = paper_variant_grid(deltas=(3, 5, 7), ks=(1, 2, 3))
-    names = {p.name for p in grid}
-    # 7 roots x 4 variants + dijkstra baseline
-    assert len(grid) == 7 * 4 + 1
-    assert "chaotic+threadq" in names          # the paper's winner
-    assert "delta5+buffer" in names            # classic Δ-stepping
-    assert "dijkstra+buffer" in names
-
-
-def test_policy_validation():
-    with pytest.raises(ValueError):
-        make_policy("delta:5", "warpq")
-    with pytest.raises(ValueError):
-        make_ordering("bogus")
+# Non-hypothesis coverage of the ordering registry, hierarchy grid and
+# spec grammar lives in tests/test_hierarchy.py (it must run even when
+# hypothesis is absent).
