@@ -13,7 +13,8 @@ not |V|).  Runs on 8 placeholder devices in a subprocess so
 pod/device/chunk-scoped orderings are distinct.
 
 CLI:  PYTHONPATH=src python benchmarks/bench_variants.py \
-          [--quick] [--scale N] [--json BENCH_variants.json]
+          [--quick] [--scale N] [--json BENCH_variants.json] \
+          [--json-partition BENCH_partition.json]
 
 ``--quick`` shrinks the grid (CI trajectory job); the JSON rows carry
 supersteps, bytes, bytes/superstep, fallbacks and wall time per
@@ -21,7 +22,10 @@ variant × exchange so the perf trajectory accumulates across PRs.
 Besides the preset grid, ``HIERARCHY_SPECS`` adds composed multi-level
 hierarchy points (grammar v2, e.g. ``delta:5 > pod:dijkstra >
 chunk:delta:1``) so the beyond-paper family space is tracked too —
-including in ``--quick``.
+including in ``--quick``.  ``--json-partition`` additionally runs the
+partition dimension (``PARTITIONS``: relabeling partitioners on one
+skewed RMAT at W=8, tracking the stacked row count R, straggler ratio
+and exchanged bytes per strategy).
 """
 
 from __future__ import annotations
@@ -38,6 +42,11 @@ EXCHANGES = ["a2a", "sparse", "auto"]
 HIERARCHY_SPECS = [
     "delta:5 > pod:dijkstra > chunk:delta:1",
 ]
+
+#: the partition dimension (BENCH_partition.json): relabeling
+#: partitioners on one skewed RMAT under a fixed ordering, tracking
+#: stacked row count R / straggler ratio / bytes / wall per strategy
+PARTITIONS = ["block", "shuffle:7", "ebal", "degree"]
 
 CHILD = r"""
 import json, time
@@ -98,29 +107,113 @@ print(json.dumps(rows))
 """
 
 
+CHILD_PART = r"""
+import json, time
+import numpy as np, jax
+from repro.graph import rmat1, partition_graph
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference
+
+SCALE = %(scale)d
+WIDTH = 8  # narrow ELL => fat-row chunking dominates => skew visible
+rows = []
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+g = rmat1(SCALE, seed=7)
+ref = dijkstra_reference(g, 0)
+for part in %(partitions)s:
+    pg = partition_graph(g, 8, width=WIDTH, partitioner=part)
+    st = pg.load_stats()
+    for exchange in %(exchanges)s:
+        cfg = SolverConfig.from_spec(
+            "delta:5+threadq", exchange=exchange, chunk_size=256,
+            partition=part, frontier_cap=%(frontier_cap)s)
+        solver = Solver(cfg, mesh=mesh)
+        prob = Problem(pg, SingleSource(0))
+        sol = solver.solve(prob)          # compile + warm
+        t0 = time.perf_counter()
+        sol = solver.solve(prob)
+        wall_s = time.perf_counter() - t0
+        m = sol.metrics
+        ok = np.allclose(np.where(np.isinf(ref), -1, ref),
+                         np.where(np.isinf(sol.state), -1, sol.state))
+        rows.append(dict(
+            graph="rmat1", scale=SCALE, partition=part,
+            exchange=exchange, ok=bool(ok), wall_s=wall_s,
+            max_rows=st["max_rows"], n_local=pg.n_local,
+            straggler_rows=st["straggler_rows"],
+            ell_occupancy=st["ell_occupancy"],
+            **m.as_dict()))
+print(json.dumps(rows))
+"""
+
+
+def _run_child(child: str, timeout: int = 3000) -> list:
+    """Run a benchmark child on 8 placeholder devices and parse its
+    JSON rows (last stdout line)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", child], env=env,
+        capture_output=True, text=True, timeout=timeout,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-3000:])
+    return json.loads(r.stdout.splitlines()[-1])
+
+
 def run(
     scale: int = 10,
     quick: bool = False,
     exchanges=None,
     frontier_cap: int | None = 4,
 ) -> list:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = "src"
-    child = CHILD % {
+    return _run_child(CHILD % {
         "scale": scale,
         "quick": int(quick),
         "exchanges": repr(exchanges or EXCHANGES),
         "frontier_cap": repr(frontier_cap),
         "hier_specs": repr(HIERARCHY_SPECS),
-    }
-    r = subprocess.run(
-        [sys.executable, "-c", child], env=env,
-        capture_output=True, text=True, timeout=3000,
-    )
-    if r.returncode != 0:
-        raise RuntimeError(r.stderr[-3000:])
-    return json.loads(r.stdout.splitlines()[-1])
+    })
+
+
+def run_partition(
+    scale: int = 10,
+    partitions=None,
+    exchanges=None,
+    frontier_cap: int | None = 16,
+) -> list:
+    """The partition-dimension cell: one skewed RMAT, one ordering,
+    every relabeling partitioner × {a2a, sparse}."""
+    return _run_child(CHILD_PART % {
+        "scale": scale,
+        "partitions": repr(partitions or PARTITIONS),
+        "exchanges": repr(exchanges or ["a2a", "sparse"]),
+        "frontier_cap": repr(frontier_cap),
+    })
+
+
+def main_partition(
+    scale: int = 10, json_path: str | None = None
+) -> list[str]:
+    rows = run_partition(scale)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+    out = []
+    for r in rows:
+        assert r["ok"], r
+        name = (
+            f"partition/{r['graph']}_s{r['scale']}/"
+            f"{r['partition']}/{r['exchange']}"
+        )
+        derived = (
+            f"R={r['max_rows']};straggler={r['straggler_rows']:.3f};"
+            f"steps={r['supersteps']};xbytes={r['exchange_bytes']};"
+            f"relax={r['relaxations']}"
+        )
+        out.append(f"{name},{r['wall_s']*1e6:.1f},{derived}")
+    return out
 
 
 def main(
@@ -165,7 +258,14 @@ if __name__ == "__main__":
     ap.add_argument("--scale", type=int, default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the raw rows as JSON")
+    ap.add_argument("--json-partition", default=None, metavar="PATH",
+                    help="also run the partition-dimension cell "
+                         "(block vs shuffle vs ebal vs degree on one "
+                         "RMAT) and dump its rows as JSON")
     a = ap.parse_args()
     scale = a.scale if a.scale is not None else (9 if a.quick else 10)
     for line in main(scale, quick=a.quick, json_path=a.json):
         print(line)
+    if a.json_partition:
+        for line in main_partition(scale, json_path=a.json_partition):
+            print(line)

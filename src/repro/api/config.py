@@ -28,7 +28,18 @@ frontier-sparse execution modes (``/sparse``: O(frontier) compaction
 + (idx, val) all_to_all with a dense fallback on capacity overflow;
 ``/auto``: sparse only while the carried pending count is small).
 ``frontier_cap`` bounds the per-device compacted frontier (None =
-rows/8).  Both grammars round-trip through ``config.name``.
+rows/8).
+
+Both grammars accept a trailing partition segment selecting the graph
+relabeling partitioner (``repro.graph.partition``)::
+
+    root[+variant][/exchange][@partitioner]
+    "delta:5+threadq/sparse@ebal"
+    "delta:5 > pod:dijkstra /sparse @shuffle:7"
+
+with partitioner ∈ {block, shuffle[:seed], ebal, degree} (``block``,
+the identity relabeling, is the default and is omitted from
+``config.name``).  All grammars round-trip through ``config.name``.
 """
 
 from __future__ import annotations
@@ -40,6 +51,7 @@ from repro.core.eagm import DEFAULT_CHUNK, Hierarchy, make_hierarchy
 from repro.core.engine import EXCHANGE_MODES, EngineConfig, RELAX_IMPLS
 from repro.core.ordering import suggest
 from repro.core.processing import ProcessingFn
+from repro.graph.partition import canonical_partitioner
 
 EXCHANGES = EXCHANGE_MODES
 
@@ -60,6 +72,11 @@ class SolverConfig:
     # (directly, as a spec string, or via ``from_spec`` grammar v2) it
     # wins and root/variant are re-derived for display.
     hierarchy: Optional[Hierarchy] = None
+    # graph relabeling partitioner (repro.graph.partition): 'block' |
+    # 'shuffle[:seed]' | 'ebal' | 'degree'; canonicalized so equal
+    # configs hash equal.  Part of equality: a different ownership map
+    # is a different solver (distinct partition memo / Solution layout).
+    partition: str = "block"
 
     def __post_init__(self):
         if self.chunk_size <= 0:
@@ -98,6 +115,10 @@ class SolverConfig:
                 f"got {self.relax_impl!r}"
                 f"{suggest(str(self.relax_impl), RELAX_IMPLS)}"
             )
+        # canonicalize (validates with a did-you-mean on unknown kinds)
+        object.__setattr__(
+            self, "partition", canonical_partitioner(self.partition)
+        )
 
     @classmethod
     def from_spec(cls, spec: str, **overrides) -> "SolverConfig":
@@ -109,6 +130,14 @@ class SolverConfig:
         rest = str(spec).strip()
         if not rest:
             raise ValueError(f"empty solver spec {spec!r}")
+        if "@" in rest:
+            rest, partition = rest.rsplit("@", 1)
+            rest, partition = rest.strip(), partition.strip()
+            if not partition:
+                raise ValueError(f"empty partition segment in spec {spec!r}")
+            if not rest:
+                raise ValueError(f"empty ordering segment in spec {spec!r}")
+            overrides.setdefault("partition", partition)
         if "/" in rest:
             rest, exchange = rest.rsplit("/", 1)
             rest, exchange = rest.strip(), exchange.strip()
@@ -138,8 +167,11 @@ class SolverConfig:
         """Round-trippable spec: ``from_spec(cfg.name) == cfg``.  Emits
         the legacy ``root+variant`` form when the hierarchy is a paper
         preset (at the default chunk size), the ``>`` grammar
-        otherwise."""
-        return f"{self.hierarchy.name}/{self.exchange}"
+        otherwise; a non-default partitioner appends ``@<partition>``."""
+        base = f"{self.hierarchy.name}/{self.exchange}"
+        if self.partition != "block":
+            base += f"@{self.partition}"
+        return base
 
     def engine_config(self, processing: ProcessingFn) -> EngineConfig:
         return EngineConfig(

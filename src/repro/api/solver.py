@@ -24,7 +24,6 @@ raise committed state — cold-solve those.
 from __future__ import annotations
 
 import dataclasses
-import zlib
 from collections import OrderedDict
 from typing import Optional, Sequence, Union
 
@@ -48,8 +47,8 @@ from repro.core.engine import (
 from repro.core.frontier import frontier_caps
 from repro.core.metrics import WorkMetrics
 from repro.core.processing import ProcessingFn
-from repro.graph.formats import Graph
-from repro.graph.partition import PartitionedGraph, partition_1d
+from repro.graph.formats import Graph, graph_fingerprint
+from repro.graph.partition import PartitionedGraph, partition_graph
 
 # ---------------------------------------------------------------------
 # process-wide engine cache (shared by every Solver and by the legacy
@@ -186,7 +185,7 @@ def solve_with_engine_config(
     m = _finish_metrics(
         pg, ecfg, it, commits, relax, classes, active, fallbacks
     )
-    return np.asarray(D).reshape(-1)[: pg.n], m
+    return pg.unpermute(np.asarray(D).reshape(-1)), m
 
 
 # ---------------------------------------------------------------------
@@ -196,14 +195,18 @@ def solve_with_engine_config(
 
 @dataclasses.dataclass(eq=False)
 class Solution:
-    """Result of one query: the committed state plus what ``resolve``
-    needs to warm-restart from it."""
+    """Result of one query: the committed state (in original vertex
+    ids) plus what ``resolve`` needs to warm-restart from it
+    (``padded`` is in the partition's relabeled slot space, so the
+    producing :class:`PartitionedGraph` rides along for the layout-
+    compatibility check)."""
 
     state: np.ndarray          # (n,) committed per-vertex state
     metrics: WorkMetrics
     problem: Problem
     config: SolverConfig
     padded: np.ndarray         # (P, n_local) committed state, padded
+    pg: Optional[PartitionedGraph] = None
 
     @property
     def graph(self):
@@ -240,13 +243,22 @@ class Solver:
                     f"graph partitioned for {graph.n_parts} parts but "
                     f"mesh has {self.n_devices} devices"
                 )
+            if graph.partitioner != self.config.partition:
+                raise ValueError(
+                    f"graph pre-partitioned with "
+                    f"{graph.partitioner!r} but config requests "
+                    f"{self.config.partition!r}; re-partition with "
+                    "repro.graph.partition_graph or pass the raw Graph"
+                )
             return graph
-        fp = _graph_fingerprint(graph)
+        fp = graph_fingerprint(graph)
         hit = self._pg_cache.get(id(graph))
         if hit is not None and hit[0] is graph and hit[1] == fp:
             self._pg_cache.move_to_end(id(graph))
             return hit[2]
-        pg = partition_1d(graph, self.n_devices)
+        pg = partition_graph(
+            graph, self.n_devices, partitioner=self.config.partition
+        )
         self._pg_cache[id(graph)] = (graph, fp, pg)
         if len(self._pg_cache) > self._pg_cache_size:
             self._pg_cache.popitem(last=False)
@@ -356,6 +368,17 @@ class Solver:
                 f"partition shape {prev.padded.shape} != "
                 f"{(pg.n_parts, pg.n_local)}"
             )
+        if prev.pg is not None and not prev.pg.same_layout(pg):
+            # perm composes with warm restarts only when it is the SAME
+            # perm: `padded` is in the relabeled slot space, so a
+            # changed ownership map (different partitioner/seed, or a
+            # perturbation that moved ebal's degree boundaries) would
+            # silently seed the wrong vertices
+            raise ValueError(
+                "resolve: the partition layout changed between the "
+                f"previous solution ({prev.pg.partitioner}) and the "
+                f"new graph ({pg.partitioner}); cold-solve instead"
+            )
         ecfg = self.config.engine_config(p)
         worst = np.float32(p.worst)
 
@@ -367,7 +390,8 @@ class Solver:
         )
         T_full = _bootstrap_candidates(pg, p, prev.padded)
         for v, s, _ in problem.source_items():
-            T_full[v] = p.reduce(np.float32(T_full[v]), np.float32(s))
+            pid = int(pg.padded_id(int(v)))  # owner map: original -> slot
+            T_full[pid] = p.reduce(np.float32(T_full[pid]), np.float32(s))
         T0 = np.concatenate(
             [T_full.reshape(pg.n_parts, pg.n_local),
              np.full((pg.n_parts, 1), worst, np.float32)],
@@ -398,25 +422,19 @@ class Solver:
             pg, ecfg, it, commits, relax, classes, active, fallbacks
         )
         return Solution(
-            state=padded.reshape(-1)[: pg.n],
+            state=pg.unpermute(padded.reshape(-1)),
             metrics=m,
             problem=problem,
             config=self.config,
             padded=padded,
+            pg=pg,
         )
 
 
-def _graph_fingerprint(g: Graph) -> tuple:
-    """Cheap content token so in-place edge mutation (the perturbation
-    idiom) invalidates the partition memo instead of silently reusing
-    stale buffers.  CRC over the COO arrays — one pass, no copy,
-    negligible next to a solve.  (Not xor-reduce: a uniform
-    transformation like ``weight *= 2`` flips the same bit in every
-    element and cancels out of xor whenever the count is even.)"""
-    crc = 0
-    for arr in (g.src, g.dst, g.weight):
-        crc = zlib.crc32(memoryview(np.ascontiguousarray(arr)), crc)
-    return (g.n, g.m, crc)
+# back-compat alias; the canonical helper lives in the graph layer so
+# other derived-buffer memos (e.g. selfstab's transpose-ELL cache) can
+# share it
+_graph_fingerprint = graph_fingerprint
 
 
 def _bootstrap_candidates(

@@ -46,6 +46,13 @@ SSSP_CELLS = {
         scale=26, avg_degree=32, width=32,
         spec="delta:5 > pod:dijkstra > chunk:delta:1 /sparse",
     ),
+    # beyond-paper partition point: edge-balanced relabeling (@ebal)
+    # keeps the stacked ELL row count near the mean rank instead of
+    # the RMAT hub rank (see repro.graph.partition)
+    "rmat26_delta_ebal_sparse": dict(
+        scale=26, avg_degree=32, width=32,
+        spec="delta:5+threadq/sparse@ebal",
+    ),
 }
 SHAPES = list(SSSP_CELLS)
 

@@ -527,13 +527,15 @@ def initial_state(
 ):
     """Dense initial state from the initial workitem set S.
 
-    ``sources`` — [(vertex, state, level)].  D = worst everywhere,
-    T[v] = the `processing.reduce`-combine of all initial workitems
-    targeting v (duplicates keep the best state, not the last written
-    one — matters for SSWP's max-reduce and multi-source sets with
-    repeats); ties keep the smallest level.  Shapes (P, n_local+1);
-    the trailing slot per device is the dummy target of padded virtual
-    rows and stays at `worst` forever.
+    ``sources`` — [(vertex, state, level)] in *original* vertex ids;
+    the partition's owner map (``pg.owner_slot``, the relabeling
+    permutation) places each on its owning rank.  D = worst
+    everywhere, T[v] = the `processing.reduce`-combine of all initial
+    workitems targeting v (duplicates keep the best state, not the
+    last written one — matters for SSWP's max-reduce and multi-source
+    sets with repeats); ties keep the smallest level.  Shapes
+    (P, n_local+1); the trailing slot per device is the dummy target
+    of padded virtual rows and stays at `worst` forever.
     """
     P_, nl = pg.n_parts, pg.n_local
     worst = np.float32(processing.worst)
@@ -541,7 +543,8 @@ def initial_state(
     T = np.full((P_, nl + 1), worst, dtype=np.float32)
     L = np.full((P_, nl + 1), np.inf, dtype=np.float32)
     for (v, s, lvl) in sources:
-        i, j = divmod(int(v), nl)
+        i, j = pg.owner_slot(int(v))
+        i, j = int(i), int(j)
         s, lvl = np.float32(s), np.float32(lvl)
         if bool(processing.better(s, T[i, j])):
             T[i, j] = s

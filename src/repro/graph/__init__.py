@@ -6,7 +6,9 @@ host-side numpy until `device_arrays()` / the partitioner hand padded,
 fixed-shape buffers to JAX.
 """
 
-from repro.graph.formats import Graph, CSR, ELL, coo_to_csr, csr_to_ell
+from repro.graph.formats import (
+    Graph, CSR, ELL, coo_to_csr, csr_to_ell, graph_fingerprint,
+)
 from repro.graph.generators import (
     rmat_graph,
     rmat1,
@@ -15,7 +17,13 @@ from repro.graph.generators import (
     small_world_graph,
     erdos_renyi_graph,
 )
-from repro.graph.partition import PartitionedGraph, partition_1d
+from repro.graph.partition import (
+    PARTITIONER_KINDS,
+    PartitionedGraph,
+    canonical_partitioner,
+    partition_1d,
+    partition_graph,
+)
 from repro.graph.sampler import FanoutSampler, SampledBlock
 
 __all__ = [
@@ -24,6 +32,7 @@ __all__ = [
     "ELL",
     "coo_to_csr",
     "csr_to_ell",
+    "graph_fingerprint",
     "rmat_graph",
     "rmat1",
     "rmat2",
@@ -32,6 +41,9 @@ __all__ = [
     "erdos_renyi_graph",
     "PartitionedGraph",
     "partition_1d",
+    "partition_graph",
+    "canonical_partitioner",
+    "PARTITIONER_KINDS",
     "FanoutSampler",
     "SampledBlock",
 ]

@@ -11,6 +11,7 @@ weight ``+inf`` so min-plus relaxation through a padded slot is a no-op.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional
 
 import numpy as np
@@ -103,6 +104,20 @@ class ELL:
     def density(self) -> float:
         real = int(np.sum(self.col != self.pad_col))
         return real / max(1, self.n_rows * self.width)
+
+
+def graph_fingerprint(g: Graph) -> tuple:
+    """Cheap content token so in-place edge mutation (the perturbation
+    idiom) invalidates derived-buffer memos (partitions, transpose
+    ELLs) instead of silently reusing stale data.  CRC over the COO
+    arrays — one pass, no copy, negligible next to a solve.  (Not
+    xor-reduce: a uniform transformation like ``weight *= 2`` flips
+    the same bit in every element and cancels out of xor whenever the
+    count is even.)"""
+    crc = 0
+    for arr in (g.src, g.dst, g.weight):
+        crc = zlib.crc32(memoryview(np.ascontiguousarray(arr)), crc)
+    return (g.n, g.m, crc)
 
 
 def coo_to_csr(g: Graph) -> CSR:

@@ -96,6 +96,11 @@ def main() -> None:
                     choices=["buffer", "threadq", "nodeq", "numaq"])
     ap.add_argument("--exchange", default="a2a",
                     choices=list(EXCHANGE_MODES))
+    ap.add_argument("--partition", default=None, metavar="STRATEGY",
+                    help="graph partitioner: block | shuffle[:seed] | "
+                         "ebal | degree (also settable via the spec's "
+                         "@segment, e.g. 'delta:5/sparse@ebal'; the "
+                         "flag wins)")
     ap.add_argument("--chunk", type=int, default=1024)
     ap.add_argument("--sources", type=int, nargs="+", default=[0],
                     help=">1 source solves the batch in one engine call")
@@ -121,10 +126,21 @@ def main() -> None:
     topo = make_cpu_topology()
 
     spec = args.spec or f"{args.root}+{args.variant}/{args.exchange}"
-    cfg = SolverConfig.from_spec(spec, chunk_size=args.chunk)
+    overrides = dict(chunk_size=args.chunk)
+    if args.partition is not None:
+        overrides["partition"] = args.partition
+    cfg = SolverConfig.from_spec(spec, **overrides)
     solver = Solver(cfg, mesh=topo.mesh)
     pg = solver.partition(g)
-    print(f"[sssp] {pg.describe()}")
+    st = pg.load_stats()  # one scan, shared with the --verify printout
+    print(f"[sssp] {pg.describe(st)}")
+    if args.verify:
+        print(f"[sssp] load balance ({pg.partitioner}): "
+              f"rows/rank={st['rows_per_rank']} (padded to "
+              f"{st['max_rows']}) edges/rank={st['edges_per_rank']}")
+        print(f"[sssp] straggler ratio: rows={st['straggler_rows']:.3f} "
+              f"edges={st['straggler_edges']:.3f} "
+              f"ell_occupancy={st['ell_occupancy']:.3f}")
 
     if args.problem == "cc":
         if args.sources != [0]:

@@ -150,4 +150,4 @@ def test_all_cells_constructible_single_device():
         jax.tree_util.tree_map(lambda a, s: None, prog.args,
                                prog.in_shardings)
         built += 1
-    assert built == 46  # 10 archs x 4 shapes + 6 sssp cells
+    assert built == 47  # 10 archs x 4 shapes + 7 sssp cells

@@ -261,6 +261,171 @@ def test_hierarchy_8_devices():
     assert "HIER-MULTIDEV-OK" in r.stdout
 
 
+CHILD_PARTITION = r"""
+import numpy as np, jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference
+from repro.graph import rmat1, grid_road_graph, partition_graph
+
+mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+
+def close(a, b):
+    return np.allclose(np.where(np.isinf(a), -1, a),
+                       np.where(np.isinf(b), -1, b))
+
+# the equivalence gate: every relabeling partitioner must produce
+# BIT-identical un-permuted final distances vs the block baseline,
+# across orderings (incl. pod/device/chunk-scoped ones, whose
+# intermediate schedules DO depend on vertex placement), exchanges
+# and graphs.  W=8 so fat-row chunking makes the RMAT skew visible.
+SPECS = [
+    'chaotic', 'dijkstra', 'delta:5', 'delta:20', 'kla:2',
+    'delta:5+nodeq', 'chaotic+threadq',
+    'delta:20 > pod:dijkstra > chunk:delta:1',
+]
+PARTS = ['block', 'shuffle:3', 'ebal', 'degree']
+GRAPHS = [('rmat1', rmat1(8, seed=5)),
+          ('road', grid_road_graph(12, seed=1))]
+for gname, g in GRAPHS:
+    ref = dijkstra_reference(g, 0)
+    for spec in SPECS:
+        for ex in ['a2a', 'sparse']:
+            base = None
+            for part in PARTS:
+                cfg = SolverConfig.from_spec(
+                    spec, exchange=ex, chunk_size=16, partition=part,
+                    frontier_cap=16)
+                pg = partition_graph(g, 8, width=8, partitioner=part)
+                sol = Solver(cfg, mesh=mesh).solve(
+                    Problem(pg, SingleSource(0)))
+                assert close(ref, sol.state), (gname, spec, ex, part)
+                if base is None:
+                    base = sol.state
+                assert np.array_equal(base, sol.state), \
+                    (gname, spec, ex, part)
+
+# and the load-balance payoff on the skewed RMAT: edge-balanced
+# boundaries strictly shrink the stacked virtual-row count R
+g = GRAPHS[0][1]
+Rb = partition_graph(g, 8, width=8, partitioner='block').rows_per_rank
+Re = partition_graph(g, 8, width=8, partitioner='ebal').rows_per_rank
+assert Re < Rb, (Re, Rb)
+print('PARTITION-MULTIDEV-OK')
+"""
+
+
+@pytest.mark.slow
+def test_partition_equivalence_8_devices():
+    """The partition equivalence gate on an 8-device (pod, data,
+    model) mesh: 8 ordering specs x {a2a, sparse} x 4 partitioners x
+    2 graphs, bit-identical un-permuted states vs the block baseline,
+    plus the ebal row-count reduction on the skewed RMAT."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", CHILD_PARTITION], env=env,
+        capture_output=True, text=True, timeout=1800,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "PARTITION-MULTIDEV-OK" in r.stdout
+
+
+CHILD_PROBLEMS = r"""
+import heapq
+import numpy as np, jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.api import (EveryVertex, Problem, SingleSource, Solver,
+                       SolverConfig)
+from repro.graph import rmat1
+from repro.graph.formats import coo_to_csr
+
+mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+g = rmat1(8, seed=5)
+gu = g.symmetrized().deduplicated()
+
+def close(a, b):
+    return np.allclose(np.where(np.isinf(a), -1, a),
+                       np.where(np.isinf(b), -1, b))
+
+# ---- CC oracle: union-find, canonical label = min id in component
+parent = list(range(gu.n))
+def find(a):
+    while parent[a] != a:
+        parent[a] = parent[parent[a]]
+        a = parent[a]
+    return a
+for u, v in zip(gu.src, gu.dst):
+    ra, rb = find(int(u)), find(int(v))
+    if ra != rb:
+        parent[ra] = rb
+comp_min = {}
+for v in range(gu.n):
+    r = find(v)
+    comp_min[r] = min(comp_min.get(r, v), v)
+cc_ref = np.array([comp_min[find(v)] for v in range(gu.n)], np.int64)
+
+# ---- SSWP oracle: max-min Dijkstra
+csr = coo_to_csr(g)
+width = np.full(g.n, -np.inf)
+width[0] = np.inf
+visited = np.zeros(g.n, bool)
+heap = [(-np.float64(np.inf), 0)]
+while heap:
+    nw, v = heapq.heappop(heap)
+    w = -nw
+    if visited[v]:
+        continue
+    visited[v] = True
+    nbrs, ws = csr.neighbors(v)
+    for u, ew in zip(nbrs, ws):
+        cand = min(w, float(ew))
+        if cand > width[u]:
+            width[u] = cand
+            heapq.heappush(heap, (-cand, int(u)))
+
+# CC (EveryVertex initial workitem set) and SSWP through the facade,
+# under identity and non-identity relabeling partitioners, both
+# exchange families — all bit-identical to block and oracle-correct
+for ex in ['a2a', 'sparse']:
+    cc_base = sswp_base = None
+    for part in ['block', 'shuffle:3', 'ebal']:
+        cfg = SolverConfig(root='chaotic', exchange=ex, partition=part,
+                           frontier_cap=16)
+        cc = Solver(cfg, mesh=mesh).solve(
+            Problem(gu, EveryVertex(), processing='cc'))
+        assert np.array_equal(cc.state.astype(np.int64), cc_ref), \
+            ('cc', ex, part)
+        sswp = Solver(cfg, mesh=mesh).solve(
+            Problem(g, SingleSource(0), processing='sswp'))
+        assert close(width, sswp.state), ('sswp', ex, part)
+        if cc_base is None:
+            cc_base, sswp_base = cc.state, sswp.state
+        assert np.array_equal(cc_base, cc.state), ('cc', ex, part)
+        assert np.array_equal(sswp_base, sswp.state), ('sswp', ex, part)
+print('PROBLEMS-MULTIDEV-OK')
+"""
+
+
+@pytest.mark.slow
+def test_cc_sswp_facade_8_devices():
+    """CC (EveryVertex) and SSWP through the facade on the 8-device
+    mesh, under identity and non-identity partitioners and both
+    exchange families, vs host oracles."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", CHILD_PROBLEMS], env=env,
+        capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "PROBLEMS-MULTIDEV-OK" in r.stdout
+
+
 CHILD_LM = r"""
 import numpy as np, jax, jax.numpy as jnp
 assert len(jax.devices()) == 8

@@ -1,0 +1,294 @@
+"""The pluggable relabeling-partitioner subsystem
+(repro.graph.partition): strategy correctness host-side, the
+@partition spec grammar, and engine equivalence — every partitioner
+must produce bit-identical un-permuted final states, because the
+engine's orderings are functions of workitem values, never of vertex
+placement.  The 8-device equivalence gate lives in
+tests/test_distributed_subprocess.py."""
+
+import numpy as np
+import pytest
+
+from repro.api import Problem, SingleSource, EveryVertex, Solver, SolverConfig
+from repro.core import dijkstra_reference
+from repro.graph import (
+    Graph,
+    PARTITIONER_KINDS,
+    canonical_partitioner,
+    grid_road_graph,
+    partition_1d,
+    partition_graph,
+    rmat1,
+)
+
+ALL_PARTS = ["block", "shuffle:3", "ebal", "degree"]
+
+
+def edge_set(g: Graph):
+    return set(zip(g.src.tolist(), g.dst.tolist(), g.weight.tolist()))
+
+
+def reconstruct_edges(pg):
+    """Edge set in original ids via the owner-mapping seam
+    (to_global + inv_perm) — exercises exactly the translation the
+    facade relies on."""
+    mask = pg.row_src != pg.n_local
+    ps, rs = np.nonzero(mask)
+    gsrc = pg.to_global(ps, pg.row_src[ps, rs])
+    cols = pg.col[ps, rs]
+    wgts = pg.wgt[ps, rs]
+    em = cols != pg.n_pad
+    dsts = pg.inv_perm[cols[em]]
+    srcs = np.repeat(gsrc, em.sum(axis=1))
+    return set(zip(srcs.tolist(), dsts.tolist(), wgts[em].tolist()))
+
+
+# ------------------------------------------------------- host-side
+
+
+@pytest.mark.parametrize("part", ALL_PARTS)
+@pytest.mark.parametrize("n_parts", [1, 2, 8])
+def test_partitioner_preserves_edges(tiny_graphs, part, n_parts):
+    for g in tiny_graphs[:2]:
+        pg = partition_graph(g, n_parts, partitioner=part)
+        assert pg.partitioner == canonical_partitioner(part)
+        assert reconstruct_edges(pg) == edge_set(g)
+
+
+@pytest.mark.parametrize("part", ALL_PARTS)
+def test_owner_slot_to_global_inverse(tiny_graphs, part):
+    g = tiny_graphs[0]
+    pg = partition_graph(g, 4, partitioner=part)
+    v = np.arange(g.n)
+    rank, slot = pg.owner_slot(v)
+    assert np.all((0 <= rank) & (rank < pg.n_parts))
+    assert np.all((0 <= slot) & (slot < pg.n_local))
+    assert np.array_equal(pg.to_global(rank, slot), v)
+    # every real vertex appears exactly once in the padded space
+    pid = rank * pg.n_local + slot
+    assert len(set(pid.tolist())) == g.n
+    # unpermute inverts the relabeling
+    state = np.arange(pg.n_pad, dtype=np.float32)
+    assert np.array_equal(pg.unpermute(state), pid.astype(np.float32))
+
+
+def test_ebal_reduces_max_rows_on_skewed_rmat():
+    """The acceptance-gate inequality, host-side: edge-balanced
+    boundaries strictly shrink the stacked (max-rank) virtual row
+    count that every rank's dense sweep pays."""
+    g = rmat1(11, seed=5)
+    block = partition_graph(g, 8, width=8, partitioner="block")
+    ebal = partition_graph(g, 8, width=8, partitioner="ebal")
+    assert ebal.rows_per_rank < block.rows_per_rank
+    assert (
+        ebal.load_stats()["straggler_rows"]
+        < block.load_stats()["straggler_rows"]
+    )
+
+
+def test_load_stats_consistency(tiny_graphs):
+    g = tiny_graphs[0]
+    for part in ALL_PARTS:
+        pg = partition_graph(g, 4, partitioner=part)
+        st = pg.load_stats()
+        assert sum(st["edges_per_rank"]) == g.m
+        assert max(st["rows_per_rank"]) == st["max_rows"] == pg.rows_per_rank
+        assert 0 < st["ell_occupancy"] <= 1
+        assert st["straggler_rows"] >= 1.0
+        assert st["straggler_edges"] >= 1.0
+        assert pg.partitioner in pg.describe()
+
+
+def test_block_is_identity_and_partition_1d_compatible(tiny_graphs):
+    g = tiny_graphs[0]
+    a = partition_1d(g, 4)
+    b = partition_graph(g, 4, partitioner="block")
+    assert a.perm is None and b.perm is None
+    assert np.array_equal(a.row_src, b.row_src)
+    assert np.array_equal(a.col, b.col)
+    assert np.array_equal(a.wgt, b.wgt)
+    # identity seam: owner_slot is the classic divmod
+    v = np.arange(g.n)
+    rank, slot = a.owner_slot(v)
+    assert np.array_equal(rank, v // a.n_local)
+    assert np.array_equal(slot, v % a.n_local)
+
+
+def test_canonicalization_and_errors():
+    assert canonical_partitioner("BLOCK") == "block"
+    assert canonical_partitioner("shuffle") == "shuffle:0"
+    assert canonical_partitioner("shuffle:42") == "shuffle:42"
+    assert canonical_partitioner(" ebal ") == "ebal"
+    with pytest.raises(ValueError, match="did you mean 'ebal'"):
+        canonical_partitioner("ebl")
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        canonical_partitioner("metis")
+    with pytest.raises(ValueError, match="takes no argument"):
+        canonical_partitioner("block:3")
+    with pytest.raises(ValueError, match="seed must be an integer"):
+        canonical_partitioner("shuffle:x")
+    with pytest.raises(ValueError, match="empty partitioner"):
+        canonical_partitioner("")
+    assert set(PARTITIONER_KINDS) == {"block", "shuffle", "ebal", "degree"}
+
+
+def test_shuffle_deterministic_per_seed(tiny_graphs):
+    g = tiny_graphs[0]
+    a = partition_graph(g, 4, partitioner="shuffle:9")
+    b = partition_graph(g, 4, partitioner="shuffle:9")
+    c = partition_graph(g, 4, partitioner="shuffle:10")
+    assert np.array_equal(a.perm, b.perm)
+    assert not np.array_equal(a.perm, c.perm)
+    assert a.same_layout(b) and not a.same_layout(c)
+
+
+# ------------------------------------------------- spec grammar
+
+
+def test_spec_grammar_partition_segment():
+    cfg = SolverConfig.from_spec("delta:5+threadq/sparse@ebal")
+    assert cfg.partition == "ebal" and cfg.exchange == "sparse"
+    assert SolverConfig.from_spec(cfg.name) == cfg
+    # v2 hierarchy grammar composes with @ too
+    cfg = SolverConfig.from_spec(
+        "delta:5 > pod:dijkstra /sparse @shuffle:7"
+    )
+    assert cfg.partition == "shuffle:7"
+    assert SolverConfig.from_spec(cfg.name) == cfg
+    # defaults: block, omitted from the name
+    assert SolverConfig.from_spec("delta:5").partition == "block"
+    assert "@" not in SolverConfig.from_spec("delta:5").name
+    # canonicalization makes configs hash-equal
+    assert SolverConfig(partition="shuffle") == SolverConfig(
+        partition="shuffle:0"
+    )
+    # explicit override beats the parsed segment
+    cfg = SolverConfig.from_spec("delta:5@ebal", partition="degree")
+    assert cfg.partition == "degree"
+
+
+def test_spec_grammar_partition_errors():
+    with pytest.raises(ValueError, match="did you mean"):
+        SolverConfig.from_spec("delta:5@ebl")
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        SolverConfig(partition="metis")
+    with pytest.raises(ValueError, match="empty partition segment"):
+        SolverConfig.from_spec("delta:5@")
+    with pytest.raises(ValueError, match="empty ordering segment"):
+        SolverConfig.from_spec("@ebal")
+
+
+# ------------------------------------------- engine equivalence (P=1)
+
+
+def _close(a, b):
+    return np.allclose(
+        np.where(np.isinf(a), -1, a), np.where(np.isinf(b), -1, b)
+    )
+
+
+@pytest.mark.parametrize(
+    "spec", ["delta:5+threadq/a2a", "dijkstra/sparse", "chaotic+buffer"]
+)
+def test_single_device_equivalence(tiny_graphs, spec):
+    """Un-permuted final distances are bit-identical across
+    partitioners (the relabeling changes layout, never values)."""
+    g = tiny_graphs[0]
+    ref = dijkstra_reference(g, 0)
+    base = None
+    for part in ALL_PARTS:
+        cfg = SolverConfig.from_spec(spec, partition=part, frontier_cap=32)
+        sol = Solver(cfg).solve(Problem(g, SingleSource(0)))
+        assert _close(ref, sol.state), part
+        if base is None:
+            base = sol.state
+        assert np.array_equal(base, sol.state), (spec, part)
+
+
+def test_cc_everyvertex_under_shuffle(tiny_graphs):
+    g = tiny_graphs[0].symmetrized().deduplicated()
+    a = Solver(SolverConfig(root="chaotic", partition="shuffle:5")).solve(
+        Problem(g, EveryVertex(), processing="cc")
+    )
+    b = Solver(SolverConfig(root="chaotic")).solve(
+        Problem(g, EveryVertex(), processing="cc")
+    )
+    assert np.array_equal(a.state, b.state)
+
+
+def test_sswp_under_degree(tiny_graphs):
+    g = tiny_graphs[0]
+    a = Solver(SolverConfig(root="chaotic", partition="degree")).solve(
+        Problem(g, SingleSource(0), processing="sswp")
+    )
+    b = Solver(SolverConfig(root="chaotic")).solve(
+        Problem(g, SingleSource(0), processing="sswp")
+    )
+    assert np.array_equal(a.state, b.state)
+
+
+# ------------------------------------------------- facade plumbing
+
+
+def test_prepartitioned_graph_mismatch_raises(tiny_graphs):
+    g = tiny_graphs[0]
+    pg = partition_graph(g, 1, partitioner="shuffle:3")
+    with pytest.raises(ValueError, match="pre-partitioned"):
+        Solver("delta:5").solve(Problem(pg, SingleSource(0)))
+    # matching partitioner is accepted
+    sol = Solver(SolverConfig(partition="shuffle:3")).solve(
+        Problem(pg, SingleSource(0))
+    )
+    assert _close(dijkstra_reference(g, 0), sol.state)
+
+
+def test_resolve_composes_with_permutation(tiny_graphs):
+    """perm composes with warm restarts: resolve under a non-identity
+    partitioner seeds the relabeled slot space correctly."""
+    g = tiny_graphs[0]
+    solver = Solver(SolverConfig(partition="shuffle:3"))
+    sol = solver.solve(Problem(g, SingleSource(0)))
+    w2 = g.weight.copy()
+    w2[np.random.default_rng(0).integers(0, g.m, 25)] *= 0.25
+    g2 = Graph(g.n, g.src, g.dst, w2, name="cheap")
+    warm = solver.resolve(sol, graph=g2)
+    ref2 = dijkstra_reference(g2, 0)
+    assert _close(ref2, warm.state)
+    # adding a source through the permuted seam
+    warm2 = solver.resolve(sol, new_sources=3)
+    assert warm2.state[3] == 0.0
+
+
+def test_resolve_layout_change_raises(tiny_graphs):
+    g = tiny_graphs[0]
+    sol = Solver(SolverConfig(partition="shuffle:3")).solve(
+        Problem(g, SingleSource(0))
+    )
+    with pytest.raises(ValueError, match="partition layout changed"):
+        Solver(SolverConfig(partition="shuffle:4")).resolve(sol, graph=g)
+
+
+def test_selfstab_in_ell_cache(tiny_graphs):
+    """Satellite: repeated sweeps re-chunk nothing; in-place mutation
+    invalidates."""
+    from repro.core import selfstab
+
+    g = tiny_graphs[2]
+    selfstab.in_ell_cache_clear()
+    a = selfstab.in_ell(g)
+    b = selfstab.in_ell(g)
+    assert a is b  # memo hit, no rebuild
+    ref = dijkstra_reference(g, 0)
+    d0 = np.full(g.n, np.inf, np.float32)
+    d = selfstab.synchronous_sweep(g, 0, d0, iters=3 * g.n, ell=a)
+    assert _close(ref, d)
+    old = g.weight.copy()
+    try:
+        g.weight *= 2.0  # in place: id(g) unchanged, content changed
+        c = selfstab.in_ell(g)
+        assert c is not a
+        d2 = selfstab.synchronous_sweep(g, 0, d0, iters=3 * g.n)
+        assert _close(2.0 * ref, d2)
+    finally:
+        g.weight[:] = old  # tiny_graphs is session-scoped
+        selfstab.in_ell_cache_clear()
