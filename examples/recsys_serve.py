@@ -1,8 +1,12 @@
-"""MIND serving example: train briefly on synthetic interactions,
-then serve batched retrieval requests (the retrieval_cand cell's
-compute pattern at laptop scale).
+"""MIND *model*-serving example: train briefly on synthetic
+interactions, then serve batched retrieval requests (the
+retrieval_cand cell's compute pattern at laptop scale).
 
     PYTHONPATH=src python examples/recsys_serve.py
+
+This is the recommender demo.  The *graph* query-serving demo — the
+`repro.serve` Router/SolutionCache/LandmarkIndex stack over the SSSP
+solver — lives in examples/sssp_serve.py.
 """
 
 import time

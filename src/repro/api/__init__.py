@@ -42,8 +42,10 @@ from repro.api.problem import (
 from repro.api.solver import (
     Solution,
     Solver,
+    batch_bucket,
     compiled_engine,
     engine_cache_clear,
+    engine_cache_info,
     solve,
     solve_with_engine_config,
     trace_count,
@@ -55,5 +57,6 @@ __all__ = [
     "ExplicitSources", "SourceSpec", "as_source_spec",
     "register_processing", "get_processing",
     "Solver", "Solution", "solve", "solve_with_engine_config",
-    "compiled_engine", "engine_cache_clear", "trace_count",
+    "compiled_engine", "engine_cache_clear", "engine_cache_info",
+    "batch_bucket", "trace_count",
 ]

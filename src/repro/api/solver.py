@@ -70,6 +70,26 @@ def engine_cache_clear() -> None:
     _ENGINE_CACHE.clear()
 
 
+def engine_cache_info() -> dict:
+    """Stats seam for the serving tier: size/capacity of the process-
+    wide compiled-engine cache plus the cumulative trace count."""
+    return dict(
+        size=len(_ENGINE_CACHE),
+        capacity=_ENGINE_CACHE_SIZE,
+        traces=_TRACE_COUNT[0],
+    )
+
+
+def batch_bucket(b: int) -> int:
+    """Round a batch size up to the next power of two.  ``solve_batch``
+    pads problem batches to these buckets so a serving workload whose
+    batch size jitters between flushes (7, 8, 5, ...) reuses at most
+    log2(max_batch) compiled engines instead of tracing one per size."""
+    if b < 1:
+        raise ValueError(f"batch size must be positive: {b}")
+    return 1 << (b - 1).bit_length()
+
+
 def _bump_trace():
     _TRACE_COUNT[0] += 1
 
@@ -212,6 +232,30 @@ class Solution:
     def graph(self):
         return self.problem.graph
 
+    @property
+    def source(self) -> Optional[int]:
+        """The single source vertex, if this solution has exactly one
+        (the serving tier's cache key); None for multi-source/CC."""
+        items = self.problem.source_items()
+        if len(items) == 1:
+            return int(items[0][0])
+        return None
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of this solution's state arrays — the unit
+        the serving tier's byte-budget cache accounts in."""
+        return int(self.state.nbytes) + int(self.padded.nbytes)
+
+    def distance_to(self, v: int) -> float:
+        """Committed state at vertex ``v`` (for SSSP: the distance
+        source → v) — the point-to-point read the router serves."""
+        if not 0 <= int(v) < self.state.shape[0]:
+            raise ValueError(
+                f"vertex {v} outside [0, {self.state.shape[0]})"
+            )
+        return float(self.state[int(v)])
+
 
 class Solver:
     """Compile-once / solve-many facade over the distributed EAGM
@@ -264,6 +308,15 @@ class Solver:
             self._pg_cache.popitem(last=False)
         return pg
 
+    def stats(self) -> dict:
+        """Serving-tier observability: this solver's partition-memo
+        occupancy plus the process-wide engine-cache stats."""
+        return dict(
+            partition_memo_size=len(self._pg_cache),
+            partition_memo_capacity=self._pg_cache_size,
+            engine_cache=engine_cache_info(),
+        )
+
     # -- engine access -------------------------------------------------
 
     def compiled(
@@ -296,7 +349,13 @@ class Solver:
         collective amortizes over the batch.  All problems must share
         the graph and the processing function; per-query supersteps
         may report the batch maximum (converged elements idle
-        harmlessly — monotonicity)."""
+        harmlessly — monotonicity).
+
+        The batch is padded to the next power of two (duplicating the
+        last problem) so varying serving batch sizes bucket onto a
+        handful of compiled engines instead of retracing per size; the
+        padding lanes are solved and discarded (monotone no-ops for
+        the caller)."""
         if not problems:
             return []
         if len(problems) == 1:
@@ -312,14 +371,17 @@ class Solver:
                 )
         pg = self.partition(g0)
         B = len(problems)
+        Bpad = batch_bucket(B)
+        items = [q.source_items() for q in problems]
+        items += [items[-1]] * (Bpad - B)
         ecfg = self.config.engine_config(p)
-        fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local, batch=B)
-        D0, T0, L0 = initial_state_batch(
-            pg, p, [q.source_items() for q in problems]
+        fn = compiled_engine(
+            self.mesh, ecfg, pg.n_parts, pg.n_local, batch=Bpad
         )
+        D0, T0, L0 = initial_state_batch(pg, p, items)
         D, *rest = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
-        D = np.asarray(D)  # (P, B, n_local)
-        rest = [np.asarray(r) for r in rest]  # each (B,)
+        D = np.asarray(D)  # (P, Bpad, n_local)
+        rest = [np.asarray(r) for r in rest]  # each (Bpad,)
         return [
             self._pack(
                 problems[b], pg, ecfg, D[:, b], *(r[b] for r in rest)

@@ -50,7 +50,7 @@ from repro.core.frontier import (
     sparse_payload,
     unpack_combine,
 )
-from repro.core.metrics import WorkMetrics, model_time_s
+from repro.core.metrics import LatencyStats, WorkMetrics, model_time_s
 
 __all__ = [
     "Chaotic", "Dijkstra", "DeltaStepping", "KLA", "TopK", "Ordering",
@@ -63,5 +63,5 @@ __all__ = [
     "EXCHANGE_MODES", "RELAX_IMPLS", "EngineConfig", "run_distributed",
     "make_engine", "initial_state", "sssp_sources", "cc_sources",
     "compact_rows", "frontier_caps", "sparse_payload", "unpack_combine",
-    "WorkMetrics", "model_time_s",
+    "WorkMetrics", "LatencyStats", "model_time_s",
 ]

@@ -12,6 +12,7 @@ of the paper's comparisons (EXPERIMENTS.md §Paper-validation).
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 
 @dataclasses.dataclass
@@ -44,6 +45,51 @@ class WorkMetrics:
             f"relax={self.relaxations} waste={self.waste_ratio():.2f} "
             f"xbytes={self.exchange_bytes}"
             + ("" if self.converged else " TRUNCATED")
+        )
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    """Order statistics over a batch of latency samples — the serving
+    tier's SLO vocabulary (p50/p99 per query, throughput over the
+    window).  Percentiles use the nearest-rank method so a reported
+    p99 is an actual observed sample, not an interpolation."""
+
+    count: int = 0
+    total_s: float = 0.0
+    mean_s: float = 0.0
+    p50_s: float = 0.0
+    p90_s: float = 0.0
+    p99_s: float = 0.0
+    max_s: float = 0.0
+
+    @classmethod
+    def from_samples(cls, samples: Sequence[float]) -> "LatencyStats":
+        xs = sorted(float(s) for s in samples)
+        if not xs:
+            return cls()
+        def rank(pct: int) -> float:
+            # nearest-rank: smallest sample with cumulative freq >= pct%
+            i = (pct * len(xs) + 99) // 100  # ceil(pct·n/100), exact ints
+            return xs[min(max(i - 1, 0), len(xs) - 1)]
+        return cls(
+            count=len(xs),
+            total_s=sum(xs),
+            mean_s=sum(xs) / len(xs),
+            p50_s=rank(50),
+            p90_s=rank(90),
+            p99_s=rank(99),
+            max_s=xs[-1],
+        )
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return (
+            f"n={self.count} p50={self.p50_s*1e3:.2f}ms "
+            f"p90={self.p90_s*1e3:.2f}ms p99={self.p99_s*1e3:.2f}ms "
+            f"max={self.max_s*1e3:.2f}ms"
         )
 
 

@@ -7,7 +7,8 @@ fixed-shape buffers to JAX.
 """
 
 from repro.graph.formats import (
-    Graph, CSR, ELL, coo_to_csr, csr_to_ell, graph_fingerprint,
+    Graph, CSR, ELL, chain_fingerprint, clear_fingerprint_chain,
+    coo_to_csr, csr_to_ell, graph_fingerprint,
 )
 from repro.graph.generators import (
     rmat_graph,
@@ -33,6 +34,8 @@ __all__ = [
     "coo_to_csr",
     "csr_to_ell",
     "graph_fingerprint",
+    "chain_fingerprint",
+    "clear_fingerprint_chain",
     "rmat_graph",
     "rmat1",
     "rmat2",

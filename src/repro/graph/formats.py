@@ -106,18 +106,62 @@ class ELL:
         return real / max(1, self.n_rows * self.width)
 
 
-def graph_fingerprint(g: Graph) -> tuple:
+def graph_fingerprint(g: Graph, *, full: bool = False) -> tuple:
     """Cheap content token so in-place edge mutation (the perturbation
     idiom) invalidates derived-buffer memos (partitions, transpose
     ELLs) instead of silently reusing stale data.  CRC over the COO
     arrays — one pass, no copy, negligible next to a solve.  (Not
     xor-reduce: a uniform transformation like ``weight *= 2`` flips
     the same bit in every element and cancels out of xor whenever the
-    count is even.)"""
+    count is even.)
+
+    A graph that carries a hash-chain token (maintained by
+    :func:`chain_fingerprint` — the streaming-update path) returns it
+    directly instead of rehashing the full edge list per lookup;
+    ``full=True`` forces the O(m) rehash (the oracle the chain is
+    tested against).  The chain is only valid while every mutation
+    goes through :func:`chain_fingerprint`; code that mutates edge
+    arrays directly must call :func:`clear_fingerprint_chain` first.
+    """
+    if not full:
+        chain = getattr(g, "_fp_chain", None)
+        if chain is not None:
+            return chain
     crc = 0
     for arr in (g.src, g.dst, g.weight):
         crc = zlib.crc32(memoryview(np.ascontiguousarray(arr)), crc)
     return (g.n, g.m, crc)
+
+
+def chain_fingerprint(g: Graph, record: bytes) -> tuple:
+    """Extend ``g``'s fingerprint by one update record *incrementally*:
+    the new token is a CRC chained over (previous token, record), an
+    O(len(record)) step instead of the O(m) full rehash — the seam the
+    streaming edge-update feed (``repro.serve.updates``) uses so a
+    long-lived service doesn't rehash the edge list per update.
+
+    Call AFTER applying the mutation the record describes (the token
+    covers ``g.m``/``g.n`` as mutated).  Chained tokens live in a
+    different value space than full-rehash tokens on purpose: the two
+    must never collide for graphs with different histories, and any
+    chained token differs from the unchained token of the same arrays
+    (the chain is seeded with the pre-update token, which covers the
+    pre-update bytes).  Returns the new token and installs it on ``g``
+    so subsequent :func:`graph_fingerprint` lookups are O(1).
+    """
+    prev = graph_fingerprint(g)  # chain if present, else full rehash
+    crc = zlib.crc32(repr(prev).encode(), 0)
+    crc = zlib.crc32(record, crc)
+    token = (g.n, g.m, crc, "chain")
+    g._fp_chain = token
+    return token
+
+
+def clear_fingerprint_chain(g: Graph) -> None:
+    """Drop a chained fingerprint (next lookup rehashes) — required
+    before mutating edge arrays outside the update-record path."""
+    if hasattr(g, "_fp_chain"):
+        del g._fp_chain
 
 
 def coo_to_csr(g: Graph) -> CSR:

@@ -1,0 +1,57 @@
+"""repro.serve — the persistent SSSP query service.
+
+The paper's self-stabilization guarantee turned into a serving loop:
+one long-lived :class:`repro.api.Solver` (compile-once engines), a
+request :class:`Router` that admits point-to-point and single-source
+queries into fixed-shape batches (pad/timeout batching, so every
+flush hits the engine cache), a byte-budgeted LRU
+:class:`SolutionCache`, an :class:`UpdateFeed` that applies streamed
+edge insertions / weight changes to the live graph and keeps cached
+answers fresh via self-stabilizing warm restarts (exact — improving
+perturbations re-converge from the previous fixpoint in a few
+supersteps), and a :class:`LandmarkIndex` hub tier serving
+point-to-point estimates by triangle inequality with an ``exact=``
+escalation path.
+
+    from repro.serve import Router, Query, SolutionCache, UpdateFeed
+    from repro.api import Solver
+
+    solver = Solver("delta:5+threadq/a2a")
+    router = Router(solver, g, cache=SolutionCache(byte_budget=1 << 28))
+    ans = router.serve([Query(source=0, target=42)])[0]
+
+    feed = UpdateFeed(g, solver, cache=router.cache)
+    feed.apply(EdgeUpdate(src=3, dst=7, weight=0.5))   # warm refresh
+
+End-to-end demo: ``examples/sssp_serve.py``; service CLI:
+``python -m repro.launch.serve``; SLO benchmark:
+``benchmarks/bench_serving.py`` → ``BENCH_serving.json``.
+"""
+
+from repro.serve.cache import CacheKey, CacheStats, SolutionCache
+from repro.serve.landmarks import Estimate, LandmarkIndex, pick_landmarks
+from repro.serve.router import (
+    Answer, Query, Router, RouterStats, Ticket, serve_latency_stats,
+)
+from repro.serve.updates import (
+    EdgeUpdate, FeedStats, UpdateFeed, UpdateResult,
+)
+
+__all__ = [
+    "Answer",
+    "CacheKey",
+    "CacheStats",
+    "EdgeUpdate",
+    "Estimate",
+    "FeedStats",
+    "LandmarkIndex",
+    "Query",
+    "Router",
+    "RouterStats",
+    "SolutionCache",
+    "Ticket",
+    "UpdateFeed",
+    "UpdateResult",
+    "pick_landmarks",
+    "serve_latency_stats",
+]
