@@ -1,0 +1,61 @@
+"""repro.analyze — static verification of the AGM engine and its
+processing functions.
+
+The paper's guarantee (any self-stabilizing kernel wrapped by any
+AGM/EAGM ordering converges) only holds when the processing function
+really is a self-stabilizing kernel and the engine's hot loop really
+is the monotone dataflow the proofs assume.  This package checks both
+*statically* — nothing here runs a solve:
+
+  contract.py    self-stabilization contract verifier: every
+                 registered ProcessingFn is checked against the
+                 algebraic laws (idempotent/commutative/selective
+                 reduce, inflationary monotone relaxation, top-element
+                 identity) by exhaustive small-domain evaluation plus
+                 jaxpr inspection; violations name the law and carry a
+                 witness input.
+  jaxpr_lint.py  engine lint at the jaxpr level: traces ``build_step``
+                 across the spec grid without running it and flags
+                 host callbacks in the hot loop, weak-typed scalar
+                 arithmetic (silent promotion / retrace hazards),
+                 exchange-payload dtype overflow, sparse-payload plane
+                 mismatches and dead branches.
+  hlo_lint.py    the same gate at the compiled-HLO level (reusing the
+                 ``roofline.hlo`` parsers): f64 leaks, host
+                 custom-calls, collective plan vs the spec's
+                 expectation, payload byte accounting.
+  spec_check.py  parse-time cross-checks of exchange mode ×
+                 frontier_cap × partitioner × hierarchy compatibility,
+                 plus ``explain_config`` — the collective plan per
+                 spec, no compilation.
+  report.py      runs all passes over the full spec grid, applies the
+                 checked-in baseline, emits ``ANALYZE_report.json``
+                 (the CI ``analyze`` job's gate artifact).
+
+CLI: ``python -m repro.launch.analyze`` (see README "Static analysis").
+"""
+
+from repro.analyze.findings import (
+    Finding,
+    fingerprint,
+    load_baseline,
+    split_baselined,
+)
+from repro.analyze.contract import (
+    ContractViolation,
+    verify_processing,
+    verify_registered,
+)
+from repro.analyze.jaxpr_lint import lint_engine, lint_grid
+from repro.analyze.hlo_lint import lint_hlo_text, payload_capacity
+from repro.analyze.spec_check import check_config, explain_config
+from repro.analyze.report import run_report
+
+__all__ = [
+    "Finding", "fingerprint", "load_baseline", "split_baselined",
+    "ContractViolation", "verify_processing", "verify_registered",
+    "lint_engine", "lint_grid",
+    "lint_hlo_text", "payload_capacity",
+    "check_config", "explain_config",
+    "run_report",
+]

@@ -1,0 +1,195 @@
+"""Engine lint at the compiled-HLO level.
+
+The jaxpr pass sees what we *asked* XLA for; this pass checks what the
+compiler actually emitted, reusing the text parsers the roofline
+subsystem already maintains (``repro.roofline.hlo``):
+
+  hlo-f64              an f64 buffer in the compiled module — a
+                       promotion that survived to codegen.
+  hlo-host-call        infeed/outfeed/host custom-calls — host syncs
+                       the jaxpr trace may have hidden inside closed-
+                       over callables.
+  hlo-collective-plan  the collective opcodes present disagree with
+                       the spec's expected plan (e.g. a sparse spec
+                       whose while body contains no all-to-all, or a
+                       pmin spec that still emits one).
+  hlo-payload-bytes    per-superstep collective payload bytes, as
+                       parsed by ``roofline.hlo.collective_bytes`` —
+                       attached to the report as stats (info), the
+                       baseline every quantized-exchange PR diffs
+                       against.
+
+Compiling is the expensive part, so callers lint a representative
+subset of the grid here (the jaxpr pass covers all of it).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analyze.findings import Finding
+from repro.analyze.jaxpr_lint import StepShape, payload_index_capacity
+from repro.core.engine import EngineConfig, make_engine
+from repro.roofline.hlo import collective_bytes, hbm_traffic
+
+_HOST_CALL_RE = re.compile(
+    r"\b(infeed|outfeed)\b|custom-call.*custom_call_target="
+    r"\"(xla_python_cpu_callback|xla_python_gpu_callback|HostCallback"
+    r"[^\"]*|callback[^\"]*)\""
+)
+
+_F64_RE = re.compile(r"\bf64\[|\bs64\[|\bu64\[")
+
+#: shapes like u16[...] / bf16[...] on collective lines — candidates
+#: for the quantized-exchange capacity check
+_NARROW_COLLECTIVE_RE = re.compile(
+    r"=\s*\(?((?:u|s)(?:8|16)|bf16|f16|f8\w*)\[([0-9,]*)\][^)]*\)?\s+"
+    r"(all-to-all|all-reduce|reduce-scatter|all-gather|collective-permute)"
+)
+
+
+def compile_hlo(
+    cfg: EngineConfig,
+    shape: StepShape = StepShape(),
+    mesh=None,
+) -> str:
+    """Compile the engine for ``cfg`` at ``shape`` and return the
+    optimized per-device HLO text."""
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    n_parts = int(np.prod(tuple(mesh.devices.shape)))
+    fn = make_engine(
+        dict(n_parts=n_parts, n_local=shape.n_local), mesh, cfg
+    )
+    s = jax.ShapeDtypeStruct
+    args = (
+        s((n_parts, shape.rows), jnp.int32),
+        s((n_parts, shape.rows, shape.width), jnp.int32),
+        s((n_parts, shape.rows, shape.width), jnp.float32),
+        s((n_parts, shape.n_local + 1), jnp.float32),
+        s((n_parts, shape.n_local + 1), jnp.float32),
+        s((n_parts, shape.n_local + 1), jnp.float32),
+    )
+    return fn.lower(*args).compile().as_text()
+
+
+def payload_capacity(dtype, n_local: int) -> tuple[bool, int]:
+    """Can an exchange payload plane of ``dtype`` index ``n_local``
+    vertices exactly?  Returns (ok, capacity) — the static gate the
+    u16/bf16 quantized exchange (ROADMAP item 4) must pass before it
+    can land."""
+    cap = payload_index_capacity(dtype)
+    return cap >= n_local, cap
+
+
+def expected_collectives(cfg: EngineConfig, n_parts: int) -> dict:
+    """The collective plan a spec implies, as {opcode: required}:
+    True = must appear, False = must not, None = may appear."""
+    if n_parts <= 1:
+        # single-device modules legally compile collectives away
+        return {}
+    plan: dict = {"all-reduce": True}  # termination psum at minimum
+    if cfg.exchange in ("a2a", "sparse", "auto"):
+        plan["all-to-all"] = True
+    elif cfg.exchange == "pmin":
+        plan["all-to-all"] = False
+    return plan
+
+
+def lint_hlo_text(
+    hlo_text: str,
+    subject: str,
+    cfg: Optional[EngineConfig] = None,
+    shape: Optional[StepShape] = None,
+    n_parts: int = 1,
+) -> list:
+    """Lint compiled HLO text; returns [Finding] including an info
+    finding carrying the parsed collective/HBM stats."""
+    out: list = []
+
+    m = _F64_RE.search(hlo_text)
+    if m:
+        line = hlo_text[:m.start()].count("\n") + 1
+        out.append(Finding(
+            "hlo", "hlo-f64", "error", subject,
+            f"64-bit buffer ({m.group(0)}...) in the compiled module "
+            "— a weak-typed promotion reached codegen",
+            source=f"hlo:{line}",
+        ))
+
+    m = _HOST_CALL_RE.search(hlo_text)
+    if m:
+        line = hlo_text[:m.start()].count("\n") + 1
+        out.append(Finding(
+            "hlo", "hlo-host-call", "error", subject,
+            f"host transfer op in compiled module: {m.group(0)!r}",
+            source=f"hlo:{line}",
+        ))
+
+    coll = collective_bytes(hlo_text)
+    if cfg is not None:
+        plan = expected_collectives(cfg, n_parts)
+        for op, required in plan.items():
+            present = coll["counts"].get(op, 0) > 0
+            if required and not present:
+                out.append(Finding(
+                    "hlo", "hlo-collective-plan", "error", subject,
+                    f"spec requires a {op} (exchange={cfg.exchange!r}) "
+                    "but the compiled module contains none — the "
+                    "collective plan and the spec disagree",
+                ))
+            elif required is False and present:
+                out.append(Finding(
+                    "hlo", "hlo-collective-plan", "warn", subject,
+                    f"spec implies no {op} (exchange={cfg.exchange!r}) "
+                    f"but the compiled module contains "
+                    f"{coll['counts'][op]}",
+                ))
+
+    if shape is not None:
+        for m in _NARROW_COLLECTIVE_RE.finditer(hlo_text):
+            dt = m.group(1)
+            ok, cap = payload_capacity(dt, shape.n_local)
+            if not ok:
+                out.append(Finding(
+                    "hlo", "hlo-payload-overflow", "error", subject,
+                    f"{m.group(3)} moves a {dt} payload but {dt} can "
+                    f"only index {cap} < n_local={shape.n_local} "
+                    "vertices exactly — quantize values, never "
+                    "indices",
+                ))
+
+    hbm = hbm_traffic(hlo_text)
+    out.append(Finding(
+        "hlo", "hlo-payload-bytes", "info", subject,
+        f"collectives={coll['counts']} "
+        f"collective_bytes={coll['total_bytes']} "
+        f"hbm_bytes={hbm['total_bytes']}",
+    ))
+    return out
+
+
+def lint_compiled(
+    cfg: EngineConfig,
+    shape: StepShape = StepShape(),
+    mesh=None,
+    subject: Optional[str] = None,
+) -> list:
+    """Compile + lint one spec point."""
+    subject = subject or f"{cfg.hierarchy.name}/{cfg.exchange}"
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    n_parts = int(np.prod(tuple(mesh.devices.shape)))
+    try:
+        text = compile_hlo(cfg, shape, mesh)
+    except Exception as e:  # noqa: BLE001 — surface as a finding
+        return [Finding(
+            "hlo", "hlo-compile-fails", "error", subject,
+            f"engine does not compile: {e}",
+        )]
+    return lint_hlo_text(text, subject, cfg, shape, n_parts)

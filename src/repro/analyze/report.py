@@ -1,0 +1,184 @@
+"""Run every analyze pass over the full spec grid and gate.
+
+The grid is the paper's family grid crossed with every exchange mode
+and every partitioner — the same space ``bench_variants`` and the
+equivalence harness sweep, so the lint gate covers exactly what the
+benchmarks run.  The jaxpr pass dedupes by traced program (a
+partitioner relabels data, not code); the spec pass runs per point;
+the contract pass runs per registered processing function; the HLO
+pass compiles a representative subset (compilation is the expensive
+part, and the jaxpr pass already covered the whole grid).
+
+``run_report`` returns the JSON-serializable report the CI ``analyze``
+job uploads as ``ANALYZE_report.json`` and gates on: any finding of
+gating severity (error/warn) that is not in the checked-in baseline
+fails the build.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.analyze import contract as _contract
+from repro.analyze import spec_check as _spec
+from repro.analyze.findings import (
+    gate_failures,
+    load_baseline,
+    split_baselined,
+)
+from repro.analyze.jaxpr_lint import StepShape, lint_grid
+from repro.api.config import SolverConfig
+from repro.core.eagm import paper_variant_specs
+
+#: exchanges × partitioners spanning the grid
+ALL_EXCHANGES = ("a2a", "pmin", "sparse", "auto")
+ALL_PARTITIONERS = ("block", "shuffle", "ebal", "degree")
+
+#: representative subset for the (expensive) HLO compile pass: the
+#: main dense baseline, the optimized dense, a sparse point and a
+#: level-bearing hierarchy
+HLO_SPECS = (
+    "delta:5+buffer/pmin",
+    "delta:5+threadq/a2a",
+    "delta:5 > chunk:delta:1 /sparse",
+    "kla:2+buffer/auto",
+)
+
+
+def grid_specs(
+    exchanges: Sequence[str] = ALL_EXCHANGES,
+    partitioners: Sequence[str] = ALL_PARTITIONERS,
+    quick: bool = False,
+) -> list:
+    """The full spec grid as spec strings (hierarchy × exchange ×
+    partitioner).  ``quick`` trims to one delta/k per root kind."""
+    roots = paper_variant_specs()
+    if quick:
+        roots = [
+            s for s in roots
+            if s.split("+")[0] in ("delta:5", "kla:2", "chaotic",
+                                   "dijkstra")
+        ]
+    specs = []
+    for root in roots:
+        for ex in exchanges:
+            for part in partitioners:
+                s = f"{root}/{ex}"
+                if part != "block":
+                    s += f"@{part}"
+                specs.append(s)
+    return specs
+
+
+def run_report(
+    *,
+    baseline_path: Optional[str] = None,
+    shape: StepShape = StepShape(),
+    mesh=None,
+    mesh_axes: Sequence[str] = ("data",),
+    quick: bool = False,
+    with_hlo: bool = True,
+    hlo_specs: Sequence[str] = HLO_SPECS,
+    exchanges: Sequence[str] = ALL_EXCHANGES,
+    partitioners: Sequence[str] = ALL_PARTITIONERS,
+) -> dict:
+    """All passes; returns the ANALYZE_report dict (key ``ok`` is the
+    gate verdict)."""
+    findings: list = []
+
+    # -- contract pass over every registered processing fn -------------
+    results = _contract.verify_registered()
+    findings += _contract.contract_findings(results)
+    contract_summary = {
+        name: [str(v) for v in vs] for name, vs in results.items()
+    }
+
+    # -- spec + jaxpr passes over the grid ------------------------------
+    specs = grid_specs(exchanges, partitioners, quick=quick)
+    shape_dict = dict(
+        n_local=shape.n_local, rows=shape.rows, width=shape.width,
+        n_parts=shape.n_parts,
+    )
+    configs = []
+    for s in specs:
+        cfg = SolverConfig.from_spec(s)
+        configs.append(cfg)
+        findings += _spec.check_config(
+            cfg, shape=shape_dict, mesh_axes=mesh_axes
+        )
+    engine_cfgs = []
+    seen_engines = set()
+    for cfg in configs:
+        from repro.api.problem import get_processing
+
+        ecfg = cfg.engine_config(get_processing("sssp"))
+        key = (ecfg.hierarchy, ecfg.exchange)
+        if key not in seen_engines:
+            seen_engines.add(key)
+            engine_cfgs.append(ecfg)
+    jaxpr_results = lint_grid(engine_cfgs, shape, mesh)
+    for fs in jaxpr_results.values():
+        findings += fs
+
+    # -- HLO pass over the representative subset ------------------------
+    hlo_stats: dict = {}
+    if with_hlo:
+        from repro.analyze.hlo_lint import lint_compiled
+        from repro.api.problem import get_processing
+
+        for s in hlo_specs:
+            cfg = SolverConfig.from_spec(s)
+            ecfg = cfg.engine_config(get_processing("sssp"))
+            fs = lint_compiled(ecfg, shape, mesh, subject=cfg.name)
+            findings += [f for f in fs if f.severity != "info"]
+            hlo_stats[cfg.name] = [
+                f.message for f in fs if f.rule == "hlo-payload-bytes"
+            ]
+
+    # -- gate ------------------------------------------------------------
+    baseline = load_baseline(baseline_path)
+    fresh, baselined = split_baselined(findings, baseline)
+    failures = gate_failures(fresh)
+    counts = {"error": 0, "warn": 0, "info": 0}
+    for f in findings:
+        counts[f.severity] += 1
+    return {
+        "ok": not failures,
+        "points": len(specs),
+        "traced_engines": len(engine_cfgs),
+        "processing_checked": sorted(results),
+        "contract": contract_summary,
+        "hlo": hlo_stats,
+        "counts": counts,
+        "findings": [f.to_dict() for f in fresh],
+        "baselined": [f.to_dict() for f in baselined],
+        "shape": shape_dict,
+    }
+
+
+def render_report(report: dict) -> str:
+    """Human summary for the CLI."""
+    lines = [
+        f"analyze: {report['points']} spec-grid points "
+        f"({report['traced_engines']} distinct traced engines), "
+        f"processing={','.join(report['processing_checked'])}",
+        f"findings: {report['counts']['error']} error / "
+        f"{report['counts']['warn']} warn / "
+        f"{report['counts']['info']} info "
+        f"({len(report['baselined'])} baselined)",
+    ]
+    shown = 0
+    for f in report["findings"]:
+        if f["severity"] == "info":
+            continue
+        lines.append(
+            f"  {f['severity'].upper():5s} {f['pass_name']}/{f['rule']}"
+            f" ({f['subject']}) {f['message']}"
+            + (f" witness: {f['witness']}" if f.get("witness") else "")
+        )
+        shown += 1
+        if shown >= 40:
+            lines.append("  ... (truncated)")
+            break
+    lines.append("GATE: " + ("OK" if report["ok"] else "FAIL"))
+    return "\n".join(lines)

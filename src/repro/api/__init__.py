@@ -37,7 +37,9 @@ from repro.api.problem import (
     SourceSpec,
     as_source_spec,
     get_processing,
+    processing_names,
     register_processing,
+    registered_processing,
 )
 from repro.api.solver import (
     Solution,
@@ -55,7 +57,8 @@ __all__ = [
     "SolverConfig", "as_config", "Hierarchy", "make_hierarchy",
     "Problem", "SingleSource", "MultiSource", "EveryVertex",
     "ExplicitSources", "SourceSpec", "as_source_spec",
-    "register_processing", "get_processing",
+    "register_processing", "registered_processing", "processing_names",
+    "get_processing",
     "Solver", "Solution", "solve", "solve_with_engine_config",
     "compiled_engine", "engine_cache_clear", "engine_cache_info",
     "batch_bucket", "trace_count",

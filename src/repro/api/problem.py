@@ -24,6 +24,7 @@ from typing import Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.ordering import suggest
 from repro.core.processing import PROCESSING_FNS, ProcessingFn
 from repro.graph.formats import Graph
 from repro.graph.partition import PartitionedGraph
@@ -35,7 +36,13 @@ def register_processing(
     fn: ProcessingFn, *, overwrite: bool = False
 ) -> ProcessingFn:
     """Register ``fn`` under ``fn.name`` so problems can refer to it by
-    string.  Returns ``fn`` (usable as a decorator-style one-liner)."""
+    string.  Returns ``fn`` (usable as a decorator-style one-liner).
+
+    Registered functions are the contract verifier's enumeration seam:
+    ``repro.analyze.contract.verify_registered`` checks every entry of
+    :func:`registered_processing` against the self-stabilization laws,
+    so a registration that breaks the monotone-kernel contract is
+    caught by the CI ``analyze`` gate, not by wrong distances."""
     if not overwrite and _REGISTRY.get(fn.name, fn) is not fn:
         raise ValueError(
             f"processing {fn.name!r} already registered; "
@@ -43,6 +50,17 @@ def register_processing(
         )
     _REGISTRY[fn.name] = fn
     return fn
+
+
+def registered_processing() -> dict:
+    """Snapshot of the processing-function registry (name -> fn) — the
+    seam the contract verifier and CLI enumerate."""
+    return dict(_REGISTRY)
+
+
+def processing_names() -> tuple:
+    """The registered processing-function names, sorted."""
+    return tuple(sorted(_REGISTRY))
 
 
 def get_processing(p: Union[str, ProcessingFn]) -> ProcessingFn:
@@ -53,6 +71,7 @@ def get_processing(p: Union[str, ProcessingFn]) -> ProcessingFn:
     except KeyError:
         raise ValueError(
             f"unknown processing {p!r}; registered: {sorted(_REGISTRY)}"
+            f"{suggest(str(p), _REGISTRY)}"
         ) from None
 
 

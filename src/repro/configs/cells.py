@@ -8,13 +8,11 @@ mesh; the roofline package reads each compiled cell's cost analysis.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import Topology
 from repro.models import lm as lm_mod

@@ -35,8 +35,6 @@ def _molecule_loss(params, batch, cfg):
     node features then score (GIN-ε readout)."""
     import jax
     import jax.numpy as jnp
-    from repro.models.gnn.layers import mlp_apply
-
     def one(x, es, ed, em, y):
         logits = gin.forward(params, x, es, ed, em, cfg)
         pred = jnp.mean(logits)

@@ -24,7 +24,6 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import defaultdict
-from typing import Optional
 
 import numpy as np
 

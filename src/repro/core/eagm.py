@@ -54,7 +54,7 @@ remain as thin deprecation shims constructing equivalent hierarchies.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Tuple, Union
 
 from repro.core.ordering import (
     Dijkstra,

@@ -386,8 +386,13 @@ def build_step(
                 ok = ok & (active_prev <= jnp.int32(auto_thresh))
             # the all_to_all shapes differ between branches, so every
             # rank must take the same one: agree globally (pmin of the
-            # local votes — a rank whose buckets overflow vetoes)
-            use_sp = jax.lax.pmin(jnp.where(ok, 1, 0), all_axes) > 0
+            # local votes — a rank whose buckets overflow vetoes).
+            # Votes are pinned to strong int32: a weak-typed Python
+            # scalar here would thread promotion through the carry
+            # (jaxpr lint rule 'weak-scalar')
+            use_sp = jax.lax.pmin(
+                jnp.where(ok, jnp.int32(1), jnp.int32(0)), all_axes
+            ) > jnp.int32(0)
 
             def exchange_sparse(_):
                 recv = jax.lax.all_to_all(
@@ -404,7 +409,9 @@ def build_step(
             mine, mineL = jax.lax.cond(
                 use_sp, exchange_sparse, exchange_a2a, None
             )
-            fallbacks = fallbacks + jnp.where(use_sp, 0, 1)
+            fallbacks = fallbacks + jnp.where(
+                use_sp, jnp.int32(0), jnp.int32(1)
+            )
 
         # ---- 6. fold into pending state T ------------------------------
         mine_ext = jnp.concatenate([mine, jnp.array([worst])])
@@ -422,7 +429,7 @@ def build_step(
             relax = relax + jax.lax.psum(
                 jnp.sum(live.astype(jnp.int32)), all_axes
             )
-            classes = classes + jnp.int32(kmin != last_key)
+            classes = classes + (kmin != last_key).astype(jnp.int32)
 
         # termination detection: global count of pending workitems
         # (paper §II "active work"); kept in the carry so the while

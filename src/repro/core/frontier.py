@@ -90,9 +90,11 @@ def bucket_slots(mask2d: jax.Array, slot_cap: int):
     for non-candidates and overflow spill — a dropped slot); ``overflow``
     True iff some destination holds more than ``slot_cap`` candidates.
     """
-    pos = jnp.cumsum(mask2d.astype(jnp.int32), axis=1) - 1
-    overflow = jnp.max(pos[:, -1]) + 1 > jnp.int32(slot_cap)
-    slot = jnp.where(mask2d & (pos < slot_cap), pos, slot_cap)
+    pos = jnp.cumsum(mask2d.astype(jnp.int32), axis=1) - jnp.int32(1)
+    overflow = jnp.max(pos[:, -1]) + jnp.int32(1) > jnp.int32(slot_cap)
+    slot = jnp.where(
+        mask2d & (pos < jnp.int32(slot_cap)), pos, jnp.int32(slot_cap)
+    )
     return slot, overflow
 
 

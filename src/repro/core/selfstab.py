@@ -24,8 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.formats import Graph, coo_to_csr, csr_to_ell, \
-    graph_fingerprint
+from repro.graph.formats import Graph, coo_to_csr, graph_fingerprint
 from repro.graph.partition import chunk_fat_rows
 from repro.kernels.relax_ell import relax_rows
 

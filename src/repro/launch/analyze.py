@@ -1,0 +1,134 @@
+"""Static-analysis gate: contract verifier + spec/jaxpr/HLO lint.
+
+    PYTHONPATH=src python -m repro.launch.analyze
+    PYTHONPATH=src python -m repro.launch.analyze --quick --no-hlo
+    PYTHONPATH=src python -m repro.launch.analyze \
+        --explain "delta:5 > chunk:delta:1 /sparse"
+    PYTHONPATH=src python -m repro.launch.analyze \
+        --baseline analyze_baseline.json --json ANALYZE_report.json
+
+Runs every ``repro.analyze`` pass over the paper's full spec grid
+(hierarchy × exchange × partitioner): the self-stabilization contract
+verifier over every registered processing function, the parse-time
+spec cross-checks per grid point, the jaxpr engine lint per distinct
+traced engine, and (unless ``--no-hlo``) the compiled-HLO lint over a
+representative subset.  Nothing here runs a graph — tracing and AOT
+compilation only, so the whole gate is seconds of CPU.
+
+Exit status is the gate: 0 iff every finding of gating severity
+(error/warn) is in the checked-in baseline (``--baseline``); info
+findings never gate.  ``--write-baseline`` rewrites the baseline file
+to accept the current findings (review the diff before committing it).
+
+``--devices N`` forces N host platform devices so collectives survive
+into the compiled HLO and the hlo-collective-plan rule has teeth; it
+must be processed before jax initializes, which is why every repro
+import below is deferred past argument parsing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="static-analysis gate for the AGM engine"
+    )
+    ap.add_argument(
+        "--explain", metavar="SPEC", nargs="+",
+        help="print the per-superstep collective plan for SPEC(s) "
+             "and exit (no tracing, no compile)",
+    )
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="trim the grid to one delta/k per root kind",
+    )
+    ap.add_argument(
+        "--no-hlo", action="store_true",
+        help="skip the (compile-heavy) HLO pass",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", default="ANALYZE_report.json",
+        help="where to write the report (default %(default)s; "
+             "'-' to skip)",
+    )
+    ap.add_argument(
+        "--baseline", metavar="PATH", default="analyze_baseline.json",
+        help="accepted-findings baseline (default %(default)s; "
+             "missing file = empty baseline)",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="rewrite --baseline to accept the current findings",
+    )
+    ap.add_argument(
+        "--devices", type=int, default=None, metavar="N",
+        help="force N host platform devices (default: leave XLA "
+             "alone) so the HLO pass sees real collectives",
+    )
+    ap.add_argument(
+        "--min-points", type=int, default=0, metavar="N",
+        help="fail unless the grid covered at least N spec points "
+             "(CI coverage floor)",
+    )
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    # deferred: XLA_FLAGS must be set before jax initializes
+    from repro.analyze.findings import baseline_records
+    from repro.analyze.report import render_report, run_report
+    from repro.analyze.spec_check import explain_config
+
+    if args.explain:
+        shape = dict(n_local=64, rows=80, width=8,
+                     n_parts=args.devices or 4)
+        for i, spec in enumerate(args.explain):
+            if i:
+                print()
+            print(explain_config(spec, shape=shape))
+        return
+
+    report = run_report(
+        baseline_path=args.baseline,
+        quick=args.quick,
+        with_hlo=not args.no_hlo,
+    )
+    if args.json and args.json != "-":
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"[analyze] report -> {args.json}")
+    print(render_report(report))
+
+    if args.write_baseline:
+        from repro.analyze.findings import Finding
+
+        gating = [
+            Finding(**{k: v for k, v in f.items() if k != "fp"})
+            for f in report["findings"] + report["baselined"]
+        ]
+        with open(args.baseline, "w") as f:
+            json.dump(baseline_records(gating), f, indent=1)
+        print(f"[analyze] baseline rewritten -> {args.baseline} "
+              f"({len(baseline_records(gating))} entries)")
+        return
+
+    if args.min_points and report["points"] < args.min_points:
+        sys.exit(
+            f"coverage floor: linted {report['points']} spec points "
+            f"< required {args.min_points}"
+        )
+    if not report["ok"]:
+        sys.exit("analyze gate FAILED: unbaselined findings above")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,6 @@ import sys
 import time
 import traceback
 
-import jax
 
 
 def run_cell(arch_id: str, cell: str, multi_pod: bool, out_dir: str,

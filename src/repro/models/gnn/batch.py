@@ -22,7 +22,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.graph.formats import Graph, coo_to_csr
+from repro.graph.formats import Graph
 
 
 @dataclasses.dataclass

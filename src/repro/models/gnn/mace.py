@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.gnn.geometry import (
-    LM_INDEX, N_LM, bessel_basis, cosine_cutoff, real_gaunt_table,
+    LM_INDEX, bessel_basis, cosine_cutoff, real_gaunt_table,
     real_sph_harm_l2,
 )
 from repro.models.gnn.layers import init_mlp, mlp_apply, scatter_sum

@@ -22,14 +22,11 @@ Steps exposed (all pure functions of (params, batch)):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.models.common import (
     Topology,

@@ -19,8 +19,6 @@ without any routing collective.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,9 +1,10 @@
-from repro.roofline.hlo import collective_bytes, flops_and_bytes
+from repro.roofline.hlo import collective_bytes, flops_and_bytes, hbm_traffic
 from repro.roofline.model import (
     Roofline, from_record, PEAK_FLOPS, HBM_BW, LINK_BW,
 )
 
 __all__ = [
-    "collective_bytes", "flops_and_bytes", "Roofline", "from_record",
+    "collective_bytes", "flops_and_bytes", "hbm_traffic",
+    "Roofline", "from_record",
     "PEAK_FLOPS", "HBM_BW", "LINK_BW",
 ]

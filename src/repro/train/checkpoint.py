@@ -30,7 +30,7 @@ from __future__ import annotations
 import json
 import os
 import threading
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ m/v/master — no replication of optimizer memory).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,7 @@ must be a pure scalar loss (the model closures carry their configs).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ smoke tests must see the real (single) device; multi-device tests run
 in subprocesses that set their own flags."""
 
 import jax
-import numpy as np
 import pytest
 
 

@@ -1,0 +1,370 @@
+"""repro.analyze: the self-stabilization contract verifier, the
+jaxpr/HLO engine lint, the spec cross-checks and the CI report gate."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analyze import (
+    Finding,
+    check_config,
+    explain_config,
+    fingerprint,
+    lint_engine,
+    lint_hlo_text,
+    load_baseline,
+    payload_capacity,
+    run_report,
+    split_baselined,
+    verify_processing,
+    verify_registered,
+)
+from repro.analyze.contract import reachable_domain
+from repro.analyze.findings import baseline_records, gate_failures
+from repro.analyze.jaxpr_lint import StepShape, payload_index_capacity
+from repro.analyze.report import grid_specs, render_report
+from repro.api import SolverConfig, get_processing, processing_names
+from repro.core.processing import ProcessingFn
+
+# ------------------------------------------------------------ findings
+
+
+def test_finding_severity_validated():
+    with pytest.raises(ValueError):
+        Finding("spec", "r", "fatal", "s", "m")
+
+
+def test_fingerprint_ignores_message():
+    a = Finding("spec", "r", "warn", "s", "one wording", witness="w")
+    b = Finding("spec", "r", "warn", "s", "another wording", witness="w")
+    c = Finding("spec", "r", "warn", "s", "one wording", witness="x")
+    assert fingerprint(a) == fingerprint(b)
+    assert fingerprint(a) != fingerprint(c)
+
+
+def test_baseline_roundtrip(tmp_path):
+    f = Finding("jaxpr", "weak-scalar", "warn", "subj", "msg")
+    info = Finding("spec", "note", "info", "subj", "msg")
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps(baseline_records([f, info])))
+    base = load_baseline(str(path))
+    assert fingerprint(f) in base
+    # info findings are never baselined ...
+    assert fingerprint(info) not in base
+    fresh, old = split_baselined([f, info], base)
+    assert old == [f]
+    # ... and never gate
+    assert fresh == [info] and gate_failures(fresh) == []
+
+
+def test_baseline_missing_file_is_empty():
+    assert load_baseline("/nonexistent/analyze_baseline.json") == set()
+
+
+def test_baseline_accepts_bare_fingerprint_strings(tmp_path):
+    f = Finding("spec", "r", "error", "s", "m")
+    path = tmp_path / "b.json"
+    path.write_text(json.dumps([fingerprint(f)]))
+    assert fingerprint(f) in load_baseline(str(path))
+
+
+# ------------------------------------------------- contract verifier
+
+
+def test_registered_processing_fns_satisfy_contract():
+    results = verify_registered()
+    assert set(results) >= {"sssp", "bfs", "cc", "sswp"}
+    bad = {k: [str(v) for v in vs] for k, vs in results.items() if vs}
+    assert not bad, f"registered kernels violate the contract: {bad}"
+
+
+def test_reachable_domain_is_reachable_and_bounded():
+    dom = reachable_domain(get_processing("sssp"))
+    assert 0.0 in dom and float("inf") in dom
+    assert 3 <= len(dom) <= 48
+
+
+def test_broken_sum_reduce_rejected_with_law_and_witness():
+    # additive combine: not idempotent, not selective, not monotone —
+    # the classic non-self-stabilizing kernel
+    broken = ProcessingFn(
+        name="broken-sum",
+        edge_update=lambda s, w: s + w,
+        better=lambda a, b: a < b,
+        reduce=lambda a, b: a + b,
+        worst=float("inf"),
+    )
+    vs = verify_processing(broken)
+    laws = {v.law for v in vs}
+    assert "reduce-idempotent" in laws
+    for v in vs:
+        assert v.witness, f"violation without witness: {v}"
+        assert v.processing == "broken-sum"
+    # each violation renders law + witness for the diagnostic
+    msg = str(vs[0])
+    assert "law" in msg and "witness" in msg
+
+
+def test_non_strict_better_rejected():
+    lax = ProcessingFn(
+        name="broken-le",
+        edge_update=lambda s, w: s + w,
+        better=lambda a, b: a <= b,  # not irreflexive
+        reduce=jnp.minimum,
+        worst=float("inf"),
+    )
+    laws = {v.law for v in verify_processing(lax)}
+    assert "better-irreflexive" in laws
+
+
+def test_deflationary_edge_update_rejected():
+    shrink = ProcessingFn(
+        name="broken-shrink",
+        edge_update=lambda s, w: s - 1.0,  # improves its own source
+        better=lambda a, b: a < b,
+        reduce=jnp.minimum,
+        worst=float("inf"),
+    )
+    laws = {v.law for v in verify_processing(shrink)}
+    assert "relax-inflationary" in laws
+
+
+def test_wrong_worst_rejected():
+    offtop = ProcessingFn(
+        name="broken-worst",
+        edge_update=lambda s, w: s + w,
+        better=lambda a, b: a < b,
+        reduce=jnp.minimum,
+        worst=0.0,  # not the min-identity, not the top element
+    )
+    laws = {v.law for v in verify_processing(offtop)}
+    assert laws & {"worst-identity", "worst-top", "source-init-improving"}
+
+
+def test_custom_reduce_array_mismatch_caught():
+    # ProcessingFn.reduce_array dispatches on `reduce is jnp.minimum`;
+    # a hand-rolled min silently gets jnp.max — the verifier must see
+    # the dense sweep and the exchange combine disagree
+    handrolled = ProcessingFn(
+        name="broken-handmin",
+        edge_update=lambda s, w: s + w,
+        better=lambda a, b: a < b,
+        reduce=lambda a, b: jnp.where(a < b, a, b),
+        worst=float("inf"),
+    )
+    laws = {v.law for v in verify_processing(handrolled)}
+    assert "reduce-array-consistent" in laws
+
+
+def test_violation_cap_per_law():
+    broken = ProcessingFn(
+        name="broken-cap",
+        edge_update=lambda s, w: s + w,
+        better=lambda a, b: a < b,
+        reduce=lambda a, b: a + b,
+        worst=float("inf"),
+    )
+    vs = verify_processing(broken)
+    per_law: dict = {}
+    for v in vs:
+        per_law[v.law] = per_law.get(v.law, 0) + 1
+    assert max(per_law.values()) <= 3 and len(vs) <= 64
+
+
+# ------------------------------------------------------- jaxpr lint
+
+
+@pytest.fixture(scope="module")
+def lint_of():
+    def run(spec, **kw):
+        cfg = SolverConfig.from_spec(spec, **kw).engine_config(
+            get_processing("sssp")
+        )
+        return lint_engine(cfg, StepShape())
+
+    return run
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [
+        "delta:5+buffer/a2a",
+        "delta:5+threadq/pmin",
+        "delta:5/sparse",
+        "kla:2 > chunk:topk:16 /auto",
+        "chaotic/a2a",
+        "dijkstra/sparse",
+    ],
+)
+def test_engine_is_lint_clean(lint_of, spec):
+    # the no-retrace regression: core/engine.py + core/frontier.py pin
+    # every hot-loop Python constant, so the lint stays at zero
+    findings = lint_of(spec)
+    gating = [f for f in findings if f.severity != "info"]
+    assert not gating, "\n".join(str(f) for f in gating)
+
+
+def test_lint_survives_metrics_off(lint_of):
+    assert not lint_of("delta:5/auto", collect_metrics=False)
+
+
+def test_payload_index_capacity():
+    assert payload_index_capacity(np.float32) == 1 << 24
+    assert payload_index_capacity(np.float16) == 1 << 11
+    assert payload_index_capacity(np.int32) == np.iinfo(np.int32).max
+    assert payload_index_capacity(np.uint16) == 65535
+    assert payload_index_capacity(jnp.bfloat16) == 1 << 8
+
+
+def test_payload_capacity_gate():
+    ok, cap = payload_capacity("u16", n_local=1024)
+    assert ok and cap == 65535
+    ok, _ = payload_capacity("bf16", n_local=1024)
+    assert not ok  # bf16 indices cannot address 1024 vertices exactly
+
+
+# --------------------------------------------------------- hlo lint
+
+
+_HLO_F64 = """
+HloModule m
+ENTRY %main (p0: f32[4]) -> f64[4] {
+  %p0 = f32[4] parameter(0)
+  ROOT %c = f64[4] convert(%p0)
+}
+"""
+
+_HLO_NARROW = """
+HloModule m
+ENTRY %main (p0: u16[4,8]) -> u16[4,8] {
+  %p0 = u16[4,8] parameter(0)
+  ROOT %a2a = u16[4,8] all-to-all(%p0), dimensions={0}
+}
+"""
+
+
+def test_hlo_lint_flags_f64():
+    fs = lint_hlo_text(_HLO_F64, "t")
+    assert any(f.rule == "hlo-f64" and f.severity == "error" for f in fs)
+
+
+def test_hlo_lint_narrow_payload_overflow():
+    fs = lint_hlo_text(_HLO_NARROW, "t", shape=StepShape(n_local=100000))
+    assert any(f.rule == "hlo-payload-overflow" for f in fs)
+    # and with a small enough partition the same payload is fine
+    fs = lint_hlo_text(_HLO_NARROW, "t", shape=StepShape(n_local=64))
+    assert not any(f.rule == "hlo-payload-overflow" for f in fs)
+
+
+def test_hlo_lint_collective_plan():
+    cfg = SolverConfig.from_spec("delta:5/sparse").engine_config(
+        get_processing("sssp")
+    )
+    # a sparse spec whose module has no all-to-all: plan mismatch
+    fs = lint_hlo_text(_HLO_F64, "t", cfg=cfg, n_parts=4)
+    assert any(f.rule == "hlo-collective-plan" for f in fs)
+    # single-device modules legally compile collectives away
+    fs = lint_hlo_text(_HLO_F64, "t", cfg=cfg, n_parts=1)
+    assert not any(f.rule == "hlo-collective-plan" for f in fs)
+
+
+def test_hlo_lint_always_reports_stats():
+    fs = lint_hlo_text(_HLO_NARROW, "t")
+    stats = [f for f in fs if f.rule == "hlo-payload-bytes"]
+    assert len(stats) == 1 and stats[0].severity == "info"
+    assert "all-to-all" in stats[0].message
+
+
+# -------------------------------------------------------- spec check
+
+
+def test_spec_check_clean_point():
+    assert check_config("delta:5+threadq/a2a") == []
+
+
+def test_spec_check_frontier_cap_dense():
+    fs = check_config(SolverConfig.from_spec("delta:5/a2a",
+                                             frontier_cap=16))
+    assert [f.rule for f in fs] == ["frontier-cap-dense"]
+
+
+def test_spec_check_topk_exceeds_cap():
+    fs = check_config(SolverConfig.from_spec(
+        "delta:5 > chunk:topk:64 /sparse", frontier_cap=8))
+    assert "topk-exceeds-frontier-cap" in {f.rule for f in fs}
+
+
+def test_spec_check_partition_drift_is_info():
+    fs = check_config("delta:5/sparse@ebal")
+    drift = [f for f in fs if f.rule == "partition-layout-drift"]
+    assert drift and drift[0].severity == "info"
+
+
+def test_spec_check_shape_rules():
+    shape = dict(n_local=64, rows=80, width=8, n_parts=4)
+    fs = check_config(
+        SolverConfig.from_spec("delta:5/sparse", frontier_cap=500),
+        shape=shape,
+    )
+    assert "frontier-cap-exceeds-rows" in {f.rule for f in fs}
+
+
+def test_solver_config_lint_method():
+    cfg = SolverConfig.from_spec("delta:5/a2a", frontier_cap=16)
+    assert [f.rule for f in cfg.lint()] == ["frontier-cap-dense"]
+
+
+def test_explain_mentions_plan():
+    txt = explain_config("delta:5 > chunk:delta:1 /sparse",
+                         shape=dict(n_local=64, rows=80, width=8,
+                                    n_parts=4))
+    assert "all_to_all" in txt and "slot_cap" in txt
+    assert "collective rounds" in txt
+    txt = explain_config("delta:5+buffer/pmin")
+    assert "all-reduce" in txt
+
+
+# ------------------------------------------------------------ report
+
+
+def test_grid_covers_at_least_100_points():
+    assert len(grid_specs()) >= 100
+    assert len(grid_specs(quick=True)) >= 100
+
+
+def test_run_report_quick_gates_ok(tmp_path):
+    rep = run_report(quick=True, with_hlo=False)
+    assert rep["ok"], render_report(rep)
+    assert rep["points"] >= 100
+    assert rep["counts"]["error"] == 0 and rep["counts"]["warn"] == 0
+    assert set(rep["processing_checked"]) >= {"sssp", "cc", "sswp"}
+    # the report is JSON-serializable as-is
+    (tmp_path / "r.json").write_text(json.dumps(rep))
+    assert "GATE: OK" in render_report(rep)
+
+
+def test_sparse_engine_no_retrace_after_dtype_pinning(tiny_graphs):
+    # the weak-typed fallback-vote scalars (engine.py, pre-fix) could
+    # fork the jit cache; with every hot-loop constant pinned the
+    # sparse engine must trace exactly once per shape
+    import jax
+
+    import repro.api as api
+
+    mesh = jax.make_mesh((1,), ("data",))
+    solver = api.Solver("delta:5/sparse", mesh=mesh)
+    g = tiny_graphs[0]
+    solver.solve(api.Problem(g, api.SingleSource(0)))  # warm
+    before = api.trace_count()
+    for v in (1, 2, 3):
+        solver.solve(api.Problem(g, api.SingleSource(v)))
+    assert api.trace_count() == before, "sparse engine re-traced"
+
+
+def test_registry_enumeration_and_suggestions():
+    assert {"sssp", "bfs", "cc", "sswp"} <= set(processing_names())
+    with pytest.raises(ValueError) as ei:
+        get_processing("ssps")
+    assert "did you mean" in str(ei.value)

@@ -10,7 +10,6 @@ import pytest
 
 from repro.configs import ASSIGNED, REGISTRY, get_arch
 from repro.data import lm_batch, mind_batch, molecule_batch
-from repro.models.common import single_device_topology
 
 LM_ARCHS = [a for a in ASSIGNED if REGISTRY[a].FAMILY == "lm"]
 GNN_ARCHS = [a for a in ASSIGNED if REGISTRY[a].FAMILY == "gnn"]
@@ -32,7 +31,7 @@ def test_registry_complete():
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_arch_smoke(arch, key, topo1):
     from repro.models.lm import (
-        cache_shapes, decode_step, init_params, lm_loss, prefill_step,
+        decode_step, init_params, lm_loss, prefill_step,
     )
 
     cfg = get_arch(arch).make_config(reduced=True)

@@ -18,8 +18,6 @@ from repro.core.frontier import (
     sparse_payload,
     unpack_combine,
 )
-from repro.graph import partition_1d
-from repro.graph.formats import Graph
 
 rng = np.random.default_rng(11)
 

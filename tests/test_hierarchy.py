@@ -8,8 +8,6 @@ skip themselves when hypothesis is absent; everything else always
 runs.
 """
 
-import dataclasses
-
 import jax
 import numpy as np
 import pytest

@@ -1,0 +1,129 @@
+"""repro.roofline.hlo text parsers against canned HLO fixtures.
+
+The roofline numbers and the analyze HLO lint both stand on these
+parsers, so their behaviors — two-pass operand resolution, async
+-start/-done pairing, tuple shapes, fusion/reducer skipping — get
+pinned here against hand-computed byte counts.
+"""
+
+import pytest
+
+from repro.roofline import collective_bytes, flops_and_bytes, hbm_traffic
+from repro.roofline.hlo import _shape_bytes
+
+# ------------------------------------------------------- shape bytes
+
+
+@pytest.mark.parametrize(
+    "expr,nbytes",
+    [
+        ("f32[64]", 256),
+        ("f32[64]{0}", 256),
+        ("f32[4,8,2]", 256),
+        ("u16[10]", 20),
+        ("bf16[8]", 16),
+        ("pred[5]", 5),
+        ("(f32[64], s32[64])", 512),
+        ("f32[]", 4),            # scalar
+        ("token[]", 0),          # tokens are free
+        ("nosuchtype[8]", 0),    # unknown dtypes ignored, not crashed
+    ],
+)
+def test_shape_bytes(expr, nbytes):
+    assert _shape_bytes(expr) == nbytes
+
+
+# -------------------------------------------------- collective_bytes
+
+_COLL_HLO = """\
+HloModule test
+
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = f32[256]{0} all-gather(%ar), dimensions={0}
+  %start = (f32[64]{0}, f32[64]{0}) all-reduce-start(%p0), to_apply=%add
+  %done = f32[64]{0} all-reduce-done(%start)
+  %a2a = f32[64]{0} all-to-all(%mystery), dimensions={0}
+  ROOT %out = f32[64]{0} add(%ar, %done)
+}
+"""
+
+
+def test_collective_bytes_two_pass_resolution():
+    r = collective_bytes(_COLL_HLO)
+    # all-reduce: %ar resolves %p0 (256 B); -start counts once more
+    # under the base opcode (256 B); -done is not double-counted
+    assert r["counts"]["all-reduce"] == 2
+    assert r["bytes"]["all-reduce"] == 512
+    # all-gather: operand %ar = 256 B (operand, not the 1 KiB result)
+    assert r["bytes"]["all-gather"] == 256
+    # all-to-all over an unresolvable operand falls back to result size
+    assert r["bytes"]["all-to-all"] == 256
+    assert r["counts"]["all-to-all"] == 1
+    assert r["total_bytes"] == 512 + 256 + 256
+
+
+def test_collective_bytes_empty_module():
+    r = collective_bytes("HloModule empty\n")
+    assert r == {"bytes": {}, "counts": {}, "total_bytes": 0}
+
+
+# ------------------------------------------------------- hbm_traffic
+
+_FUSION_HLO = """\
+HloModule m
+
+%fused_comp (param_0: f32[64]) -> f32[64] {
+  %param_0 = f32[64]{0} parameter(0)
+  %big = f32[4096]{0} broadcast(%param_0), dimensions={0}
+  ROOT %mul = f32[64]{0} multiply(%param_0, %param_0)
+}
+
+%add_reducer (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add = f32[] add(%x, %y)
+}
+
+ENTRY %main (p0: f32[64]) -> f32[] {
+  %p0 = f32[64]{0} parameter(0)
+  %fus = f32[64]{0} fusion(%p0), kind=kLoop, calls=%fused_comp
+  %c0 = f32[] constant(0)
+  ROOT %red = f32[] reduce(%fus, %c0), dimensions={0}, to_apply=%add_reducer
+}
+"""
+
+
+def test_hbm_traffic_skips_fused_and_reducer_internals():
+    r = hbm_traffic(_FUSION_HLO)
+    # entry computation only: parameter/constant are free;
+    #   fusion: 256 out + 256 operand = 512
+    #   reduce: 4 out + 256 + 4 operands = 264
+    # the 16 KiB broadcast inside the fused computation never counts
+    assert r["total_bytes"] == 512 + 264
+    assert r["by_op"] == {"fusion": 512, "reduce": 264}
+
+
+def test_hbm_traffic_counts_unfused_ops():
+    hlo = """\
+HloModule m
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  ROOT %neg = f32[64]{0} negate(%p0)
+}
+"""
+    r = hbm_traffic(hlo)
+    assert r["total_bytes"] == 512  # 256 out + 256 operand
+    assert r["by_op"] == {"negate": 512}
+
+
+# --------------------------------------------------- flops_and_bytes
+
+
+def test_flops_and_bytes_extraction():
+    assert flops_and_bytes(
+        {"flops": 100.0, "bytes accessed": 40.0}
+    ) == (100.0, 40.0)
+    assert flops_and_bytes({}) == (0.0, 0.0)
+    assert flops_and_bytes(None) == (0.0, 0.0)

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.common import single_device_topology
 from repro.models.lm import (
     LMConfig, decode_step, forward, init_params, lm_head_weight,
     lm_loss, param_specs, prefill_step,

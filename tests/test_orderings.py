@@ -5,7 +5,6 @@ of the key function — which we verify directly on sampled workitems.
 """
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 pytest.importorskip("hypothesis", reason="optional dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st

@@ -15,7 +15,6 @@ from repro.graph import (
     Graph,
     PARTITIONER_KINDS,
     canonical_partitioner,
-    grid_road_graph,
     partition_1d,
     partition_graph,
     rmat1,

@@ -1,10 +1,5 @@
 """HLO collective parser + roofline model."""
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
-
 from repro.roofline import Roofline, collective_bytes
 from repro.roofline.hlo import _shape_bytes
 

@@ -1,8 +1,6 @@
 """Deeper integration coverage: multi-step autoregressive decode vs
 teacher-forced forward, and MoE dispatch invariants."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
