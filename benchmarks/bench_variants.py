@@ -147,6 +147,60 @@ print(json.dumps(rows))
 """
 
 
+CHILD_ADAPT = r"""
+import json, time, warnings
+import numpy as np, jax
+from repro.graph import rmat1, grid_road_graph
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference
+from repro.tune import AutoTuner
+
+SCALE = %(scale)d
+QUICK = %(quick)d
+rows = []
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+graphs = [("rmat1", rmat1(SCALE, seed=7)),
+          ("road", grid_road_graph(int(2 ** (SCALE / 2)), 7))]
+warnings.simplefilter("ignore", RuntimeWarning)
+for gname, g in graphs:
+    ref = dijkstra_reference(g, 0)
+    # full delta grid even under --quick: the point of this cell is
+    # that the tuner finds a better bucket width than the static
+    # delta:5 baseline on the skewed family
+    tuner = AutoTuner(
+        mesh,
+        orderings=("delta:3", "delta:5", "delta:10", "dijkstra"),
+        partitions=("block",) if QUICK else ("block", "ebal"),
+    )
+    tuned = tuner.tune(g)
+    points = [
+        ("static", SolverConfig.from_spec("delta:5+buffer/a2a")),
+        ("tuned", tuned),
+        # adaptive controller from a deliberately tiny cap: rho must
+        # grow it (retraces > 0) and retune delta mid-solve
+        ("adaptive", SolverConfig.from_spec(
+            "delta:5/sparse/adapt:rho", frontier_cap=4)),
+    ]
+    for kind, cfg in points:
+        solver = Solver(cfg, mesh=mesh)
+        prob = Problem(g, SingleSource(0))
+        sol = solver.solve(prob)          # compile + warm
+        t0 = time.perf_counter()
+        sol = solver.solve(prob)
+        wall_s = time.perf_counter() - t0
+        m = sol.metrics
+        ok = np.allclose(np.where(np.isinf(ref), -1, ref),
+                         np.where(np.isinf(sol.state), -1, sol.state))
+        rows.append(dict(
+            graph=gname, scale=SCALE, kind=kind, spec=cfg.name,
+            ok=bool(ok), wall_s=wall_s,
+            bytes_per_superstep=(
+                m.exchange_bytes / max(1, m.supersteps)),
+            pilots=tuner.pilots_run, **m.as_dict()))
+print(json.dumps(rows))
+"""
+
+
 def _run_child(child: str, timeout: int = 3000) -> list:
     """Run a benchmark child on 8 placeholder devices and parse its
     JSON rows (last stdout line)."""
@@ -191,6 +245,37 @@ def run_partition(
         "exchanges": repr(exchanges or ["a2a", "sparse"]),
         "frontier_cap": repr(frontier_cap),
     })
+
+
+def run_adaptive(scale: int = 10, quick: bool = False) -> list:
+    """The autotune cell: static baseline vs offline-tuned spec vs
+    runtime /adapt:rho controller on a skewed RMAT and a road grid."""
+    return _run_child(CHILD_ADAPT % {
+        "scale": scale,
+        "quick": int(quick),
+    })
+
+
+def main_adaptive(
+    scale: int = 10,
+    quick: bool = False,
+    json_path: str | None = None,
+) -> list[str]:
+    rows = run_adaptive(scale, quick=quick)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+    out = []
+    for r in rows:
+        assert r["ok"], r
+        name = f"autotune/{r['graph']}_s{r['scale']}/{r['kind']}"
+        derived = (
+            f"spec={r['spec']};steps={r['supersteps']};"
+            f"bps={r['bytes_per_superstep']:.0f};"
+            f"retraces={r['retraces']};fallbacks={r['sparse_fallbacks']}"
+        )
+        out.append(f"{name},{r['wall_s']*1e6:.1f},{derived}")
+    return out
 
 
 def main_partition(
@@ -262,8 +347,19 @@ if __name__ == "__main__":
                     help="also run the partition-dimension cell "
                          "(block vs shuffle vs ebal vs degree on one "
                          "RMAT) and dump its rows as JSON")
+    ap.add_argument("--adaptive", nargs="?", const="BENCH_autotune.json",
+                    default=None, metavar="PATH",
+                    help="run ONLY the autotune cell (static vs "
+                         "offline-tuned vs /adapt:rho on rmat1 + road) "
+                         "and dump its rows as JSON "
+                         "(default PATH: %(const)s)")
     a = ap.parse_args()
     scale = a.scale if a.scale is not None else (9 if a.quick else 10)
+    if a.adaptive:
+        for line in main_adaptive(scale, quick=a.quick,
+                                  json_path=a.adaptive):
+            print(line)
+        sys.exit(0)
     for line in main(scale, quick=a.quick, json_path=a.json):
         print(line)
     if a.json_partition:

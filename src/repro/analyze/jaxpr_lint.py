@@ -145,7 +145,7 @@ def trace_step(
         local,
         mesh=mesh,
         in_specs=(spec,) * 6,
-        out_specs=(spec,) + (P(),) * 6,
+        out_specs=(spec,) + (P(),) * 7,
     )
     s = jax.ShapeDtypeStruct
     args = (

@@ -24,7 +24,7 @@ from repro.analyze.findings import Finding
 from repro.api.config import SolverConfig, as_config
 from repro.core.eagm import LEVEL_SCOPE, LOCAL_LEVELS
 from repro.core.frontier import frontier_caps
-from repro.core.ordering import TopK
+from repro.core.ordering import DeltaStepping, TopK
 
 #: partitioners whose vertex->rank boundaries depend on the graph's
 #: degree structure, so a streamed update can change the layout
@@ -116,6 +116,37 @@ def check_config(
             "(cold-solve fallback) — use 'block' for update-heavy "
             "serving",
         ))
+
+    if cfg.adapt is not None:
+        from repro.tune.policies import policy_traits
+
+        traits = policy_traits(cfg.adapt)
+        root_delta = isinstance(hier.root, DeltaStepping)
+        if sparse and not traits["grows_cap"]:
+            out.append(Finding(
+                "spec", "adapt-no-cap-growth", "warn", subject,
+                f"adapt policy {cfg.adapt!r} never grows frontier_cap, "
+                "so a sparse overflow falls back dense every superstep "
+                "anyway — use '/adapt:rho' for rho-stepping cap growth "
+                "or drop the controller",
+            ))
+        if not root_delta and not sparse:
+            out.append(Finding(
+                "spec", "adapt-nothing-to-tune", "warn", subject,
+                f"nothing for the controller to tune: root "
+                f"{hier.root.spec!r} has no delta bucket width and the "
+                f"dense {cfg.exchange!r} exchange has no frontier_cap "
+                "or sparse/dense choice — the /adapt segment only "
+                "adds per-segment host synchronization",
+            ))
+        if isinstance(chunk, TopK):
+            out.append(Finding(
+                "spec", "adapt-topk-drain", "warn", subject,
+                f"chunk top-{chunk.drain} drain already rate-limits "
+                "per-superstep work device-locally; retuning delta "
+                "around it shifts classes the drain then re-truncates "
+                "— controller decisions will look ineffective",
+            ))
 
     if shape is not None:
         nl, R = int(shape["n_local"]), int(shape["rows"])
@@ -235,6 +266,28 @@ def explain_config(
                     "dense otherwise",
         }[cfg.exchange]
         lines.append(f"    {cfg.exchange:7s} {desc}")
+
+    if cfg.adapt is not None:
+        from repro.tune.policies import policy_traits
+
+        traits = policy_traits(cfg.adapt)
+        knobs = [
+            k for k, on in (
+                ("delta", traits["retunes_delta"]
+                 and isinstance(hier.root, DeltaStepping)),
+                ("frontier_cap", traits["grows_cap"]
+                 and cfg.exchange in ("sparse", "auto")),
+                ("sparse/dense choice",
+                 cfg.exchange in ("sparse", "auto")),
+            ) if on
+        ]
+        lines.append(
+            f"  controller: adapt:{cfg.adapt} every "
+            f"{cfg.adapt_window} supersteps "
+            f"(tunes {', '.join(knobs) if knobs else 'nothing'}; "
+            "delta/exchange retunes are dynamic scalars, only a "
+            "never-seen frontier_cap retraces)"
+        )
 
     rounds = (3 if cfg.collect_metrics else 2) + (
         1 if cfg.exchange in ("sparse", "auto") else 0

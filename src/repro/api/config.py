@@ -30,11 +30,17 @@ frontier-sparse execution modes (``/sparse``: O(frontier) compaction
 ``frontier_cap`` bounds the per-device compacted frontier (None =
 rows/8).
 
-Both grammars accept a trailing partition segment selecting the graph
+Both grammars accept an ``/adapt[:policy]`` segment (in any order
+with the exchange segment) enabling the runtime controller
+(``repro.tune``): the engine runs in ``adapt_window``-superstep
+segments and the named policy retunes delta / frontier_cap / the
+sparse-dense choice between segments — bare ``/adapt`` means
+``/adapt:rho`` — and a trailing partition segment selecting the graph
 relabeling partitioner (``repro.graph.partition``)::
 
-    root[+variant][/exchange][@partitioner]
+    root[+variant][/exchange][/adapt[:policy]][@partitioner]
     "delta:5+threadq/sparse@ebal"
+    "delta:5/sparse/adapt:rho"
     "delta:5 > pod:dijkstra /sparse @shuffle:7"
 
 with partitioner ∈ {block, shuffle[:seed], ebal, degree} (``block``,
@@ -77,6 +83,17 @@ class SolverConfig:
     # configs hash equal.  Part of equality: a different ownership map
     # is a different solver (distinct partition memo / Solution layout).
     partition: str = "block"
+    # adaptive execution controller policy (repro.tune): None = static
+    # solve; a policy spec ('rho', 'static', 'rho:<target_frac>', or
+    # any registered policy) = run the segmented engine and let the
+    # policy retune delta / frontier_cap / exchange choice between
+    # segments.  Spec segment: '/adapt' (= '/adapt:rho') or
+    # '/adapt:<policy>'.  Self-stabilization makes retuning exact —
+    # only the schedule changes, never the fixpoint.
+    adapt: Optional[str] = None
+    # supersteps per adaptive segment (controller decision interval);
+    # like max_iters it is part of equality but not of ``name``
+    adapt_window: int = 4
 
     def __post_init__(self):
         if self.chunk_size <= 0:
@@ -119,6 +136,17 @@ class SolverConfig:
         object.__setattr__(
             self, "partition", canonical_partitioner(self.partition)
         )
+        if self.adapt_window <= 0:
+            raise ValueError(
+                f"adapt_window must be positive: {self.adapt_window}"
+            )
+        if self.adapt is not None:
+            # canonicalize + validate the policy spec (did-you-mean on
+            # unknown policies); lazy import keeps api.config free of a
+            # module-level dependency on the tune subsystem
+            from repro.tune.policies import canonical_policy
+
+            object.__setattr__(self, "adapt", canonical_policy(self.adapt))
 
     @classmethod
     def from_spec(cls, spec: str, **overrides) -> "SolverConfig":
@@ -139,13 +167,46 @@ class SolverConfig:
                 raise ValueError(f"empty ordering segment in spec {spec!r}")
             overrides.setdefault("partition", partition)
         if "/" in rest:
-            rest, exchange = rest.rsplit("/", 1)
-            rest, exchange = rest.strip(), exchange.strip()
-            if not exchange:
-                raise ValueError(f"empty exchange segment in spec {spec!r}")
-            if not rest:
+            head, *segs = [s.strip() for s in rest.split("/")]
+            if not head:
                 raise ValueError(f"empty ordering segment in spec {spec!r}")
-            overrides.setdefault("exchange", exchange)
+            exchange_seen = adapt_seen = False
+            for seg in segs:
+                if not seg:
+                    raise ValueError(
+                        f"empty exchange segment in spec {spec!r}"
+                    )
+                kind = seg.split(":", 1)[0].strip()
+                if kind == "adapt":
+                    if adapt_seen:
+                        raise ValueError(
+                            f"duplicate adapt segment in spec {spec!r}"
+                        )
+                    adapt_seen = True
+                    policy = seg.split(":", 1)[1].strip() if ":" in seg \
+                        else "rho"
+                    if not policy:
+                        raise ValueError(
+                            f"empty adapt policy in spec {spec!r}; use "
+                            "'/adapt' (= '/adapt:rho') or "
+                            "'/adapt:<policy>'"
+                        )
+                    overrides.setdefault("adapt", policy)
+                elif kind in EXCHANGES:
+                    if exchange_seen:
+                        raise ValueError(
+                            f"duplicate exchange segment in spec {spec!r}"
+                        )
+                    exchange_seen = True
+                    overrides.setdefault("exchange", seg)
+                else:
+                    raise ValueError(
+                        f"unknown spec segment {seg!r} in {spec!r}: "
+                        f"expected an exchange mode {EXCHANGES} or "
+                        "'adapt[:policy]'"
+                        f"{suggest(kind, tuple(EXCHANGES) + ('adapt',))}"
+                    )
+            rest = head
         if ">" in rest or rest.lower().startswith("global:"):
             chunk = overrides.get("chunk_size", DEFAULT_CHUNK)
             return cls(
@@ -169,6 +230,8 @@ class SolverConfig:
         preset (at the default chunk size), the ``>`` grammar
         otherwise; a non-default partitioner appends ``@<partition>``."""
         base = f"{self.hierarchy.name}/{self.exchange}"
+        if self.adapt is not None:
+            base += f"/adapt:{self.adapt}"
         if self.partition != "block":
             base += f"@{self.partition}"
         return base
@@ -201,6 +264,7 @@ class SolverConfig:
             collect_metrics=self.collect_metrics,
             frontier_cap=self.frontier_cap,
             relax_impl=self.relax_impl,
+            adapt_window=self.adapt_window if self.adapt is not None else 0,
         )
 
 

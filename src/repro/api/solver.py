@@ -44,7 +44,7 @@ from repro.core.engine import (
     initial_state_batch,
     make_engine,
 )
-from repro.core.frontier import frontier_caps
+from repro.core.frontier import frontier_caps, grow_frontier_cap
 from repro.core.metrics import WorkMetrics
 from repro.core.processing import ProcessingFn
 from repro.graph.formats import Graph, graph_fingerprint
@@ -58,6 +58,8 @@ from repro.graph.partition import PartitionedGraph, partition_graph
 _ENGINE_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
 _ENGINE_CACHE_SIZE = 32
 _TRACE_COUNT = [0]
+_EVICTIONS = [0]
+_ADAPT_RETRACES = [0]
 
 
 def trace_count() -> int:
@@ -66,17 +68,29 @@ def trace_count() -> int:
     return _TRACE_COUNT[0]
 
 
+def note_adapt_retrace() -> None:
+    """Record one engine build forced by a shape-changing adaptive
+    decision (a frontier_cap the solve had not used before).  Called by
+    the :mod:`repro.tune` controller; surfaced via
+    :func:`engine_cache_info` and ``Solution.metrics.retraces``."""
+    _ADAPT_RETRACES[0] += 1
+
+
 def engine_cache_clear() -> None:
     _ENGINE_CACHE.clear()
 
 
 def engine_cache_info() -> dict:
     """Stats seam for the serving tier: size/capacity of the process-
-    wide compiled-engine cache plus the cumulative trace count."""
+    wide compiled-engine cache, the cumulative trace count, LRU
+    evictions, and engine builds forced by shape-changing adaptive
+    retuning decisions."""
     return dict(
         size=len(_ENGINE_CACHE),
         capacity=_ENGINE_CACHE_SIZE,
         traces=_TRACE_COUNT[0],
+        evictions=_EVICTIONS[0],
+        adapt_retraces=_ADAPT_RETRACES[0],
     )
 
 
@@ -120,7 +134,90 @@ def compiled_engine(
     _ENGINE_CACHE[key] = fn
     if len(_ENGINE_CACHE) > _ENGINE_CACHE_SIZE:
         _ENGINE_CACHE.popitem(last=False)
+        _EVICTIONS[0] += 1
     return fn
+
+
+# consecutive sparse-overflow supersteps before _finish_metrics emits
+# the actionable frontier_cap RuntimeWarning (below this, occasional
+# dense fallbacks are the capacity veto working as designed)
+OVERFLOW_WARN_STREAK = 3
+
+
+def exchange_words(
+    pg: PartitionedGraph, ecfg: EngineConfig, it: int, fallbacks: int
+) -> int:
+    """Exact exchange word count per device for ``it`` supersteps of
+    which ``fallbacks`` took the dense path, in Python ints (the
+    engine moves a statically known word count per superstep and
+    branch, so no overflow-prone on-device accumulator is needed).
+    Per device per superstep:
+
+      a2a   (P-1)·n_local·planes words — the reduce-scatter sends
+            (P-1)/P of the n_pad candidate array (+ KLA levels).
+            NOTE the seed's formula multiplied before its integer
+            division (`n_pad * 4 * (P-1) // P`), which is nonzero for
+            P > 1 but obscured the per-rank intent; this form is
+            explicit.
+      pmin  2x a2a — a full-array ring all-reduce per combine.
+      sparse (P-1)·K·S words on sparse supersteps, dense a2a words on
+            the `fallbacks` dense ones.
+
+    The adaptive driver calls this per segment with that segment's
+    ``frontier_cap``, so byte totals stay exact across cap growth.
+    """
+    use_level = ecfg.hierarchy.needs_level
+    nplanes = 2 if use_level else 1
+    P_, nl = pg.n_parts, pg.n_local
+    dense_words = (P_ - 1) * nl * nplanes
+    if ecfg.exchange == "pmin":
+        return it * 2 * dense_words
+    if ecfg.exchange == "a2a":
+        return it * dense_words
+    _, slot_cap = frontier_caps(
+        pg.rows_per_rank, pg.width, nl, P_, ecfg.frontier_cap
+    )
+    sparse_words = (P_ - 1) * (nplanes + 1) * slot_cap
+    return (it - fallbacks) * sparse_words + fallbacks * dense_words
+
+
+def _warn_metrics(
+    m: WorkMetrics, ecfg: EngineConfig, pg: PartitionedGraph, active
+) -> None:
+    """Actionable RuntimeWarnings derived from a finished solve's
+    metrics: truncation at max_iters, and a consecutive-sparse-
+    overflow run long enough that the silent per-superstep dense
+    fallback is costing real bandwidth."""
+    import warnings
+
+    if not m.converged:
+        warnings.warn(
+            f"engine hit max_iters={ecfg.max_iters} with {int(active)} "
+            "pending workitems left — the returned state is truncated "
+            "(monotone but not yet the fixpoint); raise max_iters or "
+            "check Solution.metrics.converged",
+            RuntimeWarning,
+            stacklevel=4,
+        )
+    if (
+        ecfg.exchange in ("sparse", "auto")
+        and m.overflow_streak >= OVERFLOW_WARN_STREAK
+    ):
+        row_cap, slot_cap = frontier_caps(
+            pg.rows_per_rank, pg.width, pg.n_local, pg.n_parts,
+            ecfg.frontier_cap,
+        )
+        spec = f"{ecfg.hierarchy.name}/{ecfg.exchange}"
+        warnings.warn(
+            f"sparse exchange capacity overflowed on "
+            f"{m.overflow_streak} consecutive supersteps (spec "
+            f"{spec!r}: row_cap={row_cap}, slot_cap={slot_cap}), each "
+            "falling back to the dense exchange; raise frontier_cap "
+            f"(try {grow_frontier_cap(pg.rows_per_rank, row_cap)}) or "
+            "solve with /adapt:rho for automatic cap growth",
+            RuntimeWarning,
+            stacklevel=4,
+        )
 
 
 def _finish_metrics(
@@ -132,6 +229,7 @@ def _finish_metrics(
     classes,
     active=None,
     fallbacks=0,
+    overflow_streak=0,
 ) -> WorkMetrics:
     it = int(it)
     fallbacks = int(fallbacks)
@@ -144,51 +242,14 @@ def _finish_metrics(
         workitems=int(commits),
         converged=converged,
         sparse_fallbacks=fallbacks,
+        overflow_streak=int(overflow_streak),
     )
-    # Exact exchange-byte accounting, in Python ints (the engine moves
-    # a statically known word count per superstep and branch, so
-    # (supersteps, dense-exchange-step count) reconstructs the total
-    # without any overflow-prone on-device accumulator).  Per device
-    # per superstep:
-    #   a2a   (P-1)·n_local·planes words — the reduce-scatter sends
-    #         (P-1)/P of the n_pad candidate array (+ KLA levels).
-    #         NOTE the seed's formula multiplied before its integer
-    #         division (`n_pad * 4 * (P-1) // P`), which is nonzero for
-    #         P > 1 but obscured the per-rank intent; this form is
-    #         explicit.
-    #   pmin  2x a2a — a full-array ring all-reduce per combine.
-    #   sparse (P-1)·K·S words on sparse supersteps, dense a2a words on
-    #         the `fallbacks` dense ones.
-    use_level = ecfg.hierarchy.needs_level
-    nplanes = 2 if use_level else 1
-    P_, nl = pg.n_parts, pg.n_local
-    dense_words = (P_ - 1) * nl * nplanes
-    if ecfg.exchange == "pmin":
-        words = it * 2 * dense_words
-    elif ecfg.exchange == "a2a":
-        words = it * dense_words
-    else:
-        _, slot_cap = frontier_caps(
-            pg.rows_per_rank, pg.width, nl, P_, ecfg.frontier_cap
-        )
-        sparse_words = (P_ - 1) * (nplanes + 1) * slot_cap
-        words = (it - fallbacks) * sparse_words + fallbacks * dense_words
-    m.exchange_bytes = words * 4 * P_
+    m.exchange_bytes = exchange_words(pg, ecfg, it, fallbacks) * 4 * pg.n_parts
     m.collective_rounds = it * (
         (3 if ecfg.collect_metrics else 2)
         + (1 if ecfg.exchange in ("sparse", "auto") else 0)
     )
-    if not converged:
-        import warnings
-
-        warnings.warn(
-            f"engine hit max_iters={ecfg.max_iters} with {int(active)} "
-            "pending workitems left — the returned state is truncated "
-            "(monotone but not yet the fixpoint); raise max_iters or "
-            "check Solution.metrics.converged",
-            RuntimeWarning,
-            stacklevel=3,
-        )
+    _warn_metrics(m, ecfg, pg, active)
     return m
 
 
@@ -199,11 +260,11 @@ def solve_with_engine_config(
     shares the facade's engine cache."""
     fn = compiled_engine(mesh, ecfg, pg.n_parts, pg.n_local)
     D0, T0, L0 = initial_state(pg, ecfg.processing, sources)
-    D, it, commits, relax, classes, active, fallbacks = fn(
+    D, it, commits, relax, classes, active, fallbacks, streak = fn(
         pg.row_src, pg.col, pg.wgt, D0, T0, L0
     )
     m = _finish_metrics(
-        pg, ecfg, it, commits, relax, classes, active, fallbacks
+        pg, ecfg, it, commits, relax, classes, active, fallbacks, streak
     )
     return pg.unpermute(np.asarray(D).reshape(-1)), m
 
@@ -277,6 +338,10 @@ class Solver:
         # LRU so a stream of distinct graphs can't grow it unboundedly
         self._pg_cache: "OrderedDict[int, tuple]" = OrderedDict()
         self._pg_cache_size = 8
+        # adaptive-solve counters (config.adapt specs only)
+        self._adapt_stats = dict(
+            solves=0, segments=0, retraces=0, cap_growths=0
+        )
 
     # -- graph handling ------------------------------------------------
 
@@ -315,6 +380,7 @@ class Solver:
             partition_memo_size=len(self._pg_cache),
             partition_memo_capacity=self._pg_cache_size,
             engine_cache=engine_cache_info(),
+            adapt=dict(self._adapt_stats),
         )
 
     # -- engine access -------------------------------------------------
@@ -337,8 +403,10 @@ class Solver:
         pg = self.partition(problem.graph)
         p = problem.processing_fn
         ecfg = self.config.engine_config(p)
-        fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
         D0, T0, L0 = initial_state(pg, p, problem.source_items())
+        if ecfg.adapt_window > 0:
+            return self._solve_adaptive(problem, pg, ecfg, D0, T0, L0)
+        fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
         out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
         return self._pack(problem, pg, ecfg, *out)
 
@@ -360,6 +428,13 @@ class Solver:
             return []
         if len(problems) == 1:
             return [self.solve(problems[0])]
+        if self.config.adapt is not None:
+            raise ValueError(
+                "solve_batch does not support adaptive specs (/adapt): "
+                "the controller would steer every lane with one "
+                "shared schedule; use a static spec for batches or "
+                "solve adaptive queries one at a time"
+            )
         g0 = problems[0].graph
         p = problems[0].processing_fn
         for q in problems[1:]:
@@ -464,9 +539,12 @@ class Solver:
             np.asarray(p.better(T0, D0)), np.float32(0.0), np.float32(np.inf)
         ).astype(np.float32)
 
-        fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
-        out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
-        sol = self._pack(problem, pg, ecfg, *out)
+        if ecfg.adapt_window > 0:
+            sol = self._solve_adaptive(problem, pg, ecfg, D0, T0, L0)
+        else:
+            fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
+            out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
+            sol = self._pack(problem, pg, ecfg, *out)
         # account for the bootstrap sweep: one superstep's worth of
         # full-graph relaxation done host-side
         sol.metrics.relaxations += pg.m
@@ -475,13 +553,43 @@ class Solver:
 
     # -- internals -----------------------------------------------------
 
+    def _solve_adaptive(
+        self, problem, pg, ecfg: EngineConfig, D0, T0, L0
+    ) -> Solution:
+        """Adaptive (``/adapt``) solve: the repro.tune controller runs
+        the segmented engine, retuning tunables between segments; a
+        fresh policy instance per solve keeps controller state from
+        leaking across queries."""
+        from repro.tune.controller import run_adaptive
+        from repro.tune.policies import make_tune_policy
+
+        policy = make_tune_policy(self.config.adapt)
+        D, m, report = run_adaptive(
+            self.mesh, ecfg, pg, policy, D0, T0, L0
+        )
+        st = self._adapt_stats
+        st["solves"] += 1
+        st["segments"] += report.segments
+        st["retraces"] += report.retraces
+        st["cap_growths"] += report.cap_growths
+        padded = np.asarray(D).reshape(pg.n_parts, pg.n_local)
+        return Solution(
+            state=pg.unpermute(padded.reshape(-1)),
+            metrics=m,
+            problem=problem,
+            config=self.config,
+            padded=padded,
+            pg=pg,
+        )
+
     def _pack(
         self, problem, pg, ecfg, D, it, commits, relax, classes,
-        active=None, fallbacks=0,
+        active=None, fallbacks=0, overflow_streak=0,
     ) -> Solution:
         padded = np.asarray(D).reshape(pg.n_parts, pg.n_local)
         m = _finish_metrics(
-            pg, ecfg, it, commits, relax, classes, active, fallbacks
+            pg, ecfg, it, commits, relax, classes, active, fallbacks,
+            overflow_streak,
         )
         return Solution(
             state=pg.unpermute(padded.reshape(-1)),

@@ -72,7 +72,7 @@ from repro.core.frontier import (
 )
 from repro.core.eagm import EAGMPolicy, Hierarchy, as_hierarchy
 from repro.core.metrics import WorkMetrics
-from repro.core.ordering import suggest
+from repro.core.ordering import DeltaStepping, suggest
 from repro.core.processing import ProcessingFn, SSSP
 from repro.graph.partition import PartitionedGraph
 
@@ -111,6 +111,16 @@ class EngineConfig:
     # the default — XLA fuses it fine) | 'pallas' | 'pallas_interpret'
     # (kernels/relax_push; min-plus processing only, others stay 'ref')
     relax_impl: str = "ref"
+    # adaptive segment window: 0 builds the classic run-to-convergence
+    # loop; W > 0 builds a *segment* engine that runs at most W
+    # supersteps per jitted call, threads (active, last_key, streak)
+    # through as dynamic scalars, takes a dynamic delta bucket width
+    # and exchange-force override, and returns the full (D, T, L)
+    # state plus a (W,) per-superstep metrics window so a host-side
+    # controller (repro.tune) can retune between segments.  Being an
+    # EngineConfig field puts it in the engine cache key, so adaptive
+    # and static engines never collide.
+    adapt_window: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "policy", as_hierarchy(self.policy))
@@ -125,6 +135,10 @@ class EngineConfig:
             raise ValueError(
                 f"relax_impl must be one of {RELAX_IMPLS}, got "
                 f"{self.relax_impl!r}{suggest(str(self.relax_impl), RELAX_IMPLS)}"
+            )
+        if self.adapt_window < 0:
+            raise ValueError(
+                f"adapt_window must be >= 0: {self.adapt_window}"
             )
 
     @property
@@ -184,10 +198,19 @@ def build_step(
     def pextreme(x, axes):
         return jax.lax.pmin(x, axes) if is_min else jax.lax.pmax(x, axes)
 
-    def step(row_src, col, wgt, carry):
-        (D, T, L, it, active, commits, relax, classes, last_key,
-         fallbacks) = carry
+    adaptive = cfg.adapt_window > 0
+
+    def step(row_src, col, wgt, dyn, carry):
+        if adaptive:
+            (D, T, L, it, active, commits, relax, classes, last_key,
+             fallbacks, streak, max_streak,
+             pend_w, elig_w, rows_w, sparse_w) = carry
+            delta_dyn, force_ex = dyn
+        else:
+            (D, T, L, it, active, commits, relax, classes, last_key,
+             fallbacks, streak, max_streak) = carry
         active_prev = active
+        sp_used = jnp.int32(0)
         R, W = col.shape
         if sparse_mode:
             row_cap, slot_cap = frontier_caps(
@@ -211,8 +234,17 @@ def build_step(
         pending = p.better(T, D)
         eligible = pending
         kmin = INF
-        for lvl, o in hier.annotations:
-            key = jnp.where(eligible, o.class_key(T, L), INF)
+        for ai, (lvl, o) in enumerate(hier.annotations):
+            if adaptive and ai == 0 and isinstance(o, DeltaStepping):
+                # dynamic bucket width: the same op sequence as
+                # DeltaStepping.class_key with delta a traced scalar —
+                # bit-identical to the static engine whenever the
+                # scalar equals the spec's constant, retunable by the
+                # controller without retracing
+                raw_key = jnp.floor(T / delta_dyn)
+            else:
+                raw_key = o.class_key(T, L)
+            key = jnp.where(eligible, raw_key, INF)
             if lvl in ("global", "pod"):
                 axes = all_axes if lvl == "global" else pod_axes
                 m = jnp.min(key)
@@ -381,18 +413,32 @@ def build_step(
             payload, ex_overflow = sparse_payload(
                 C, extra, n_parts, slot_cap, worst
             )
-            ok = jnp.logical_not(ex_overflow)
+            cap_ok = jnp.logical_not(ex_overflow)
+            ok = cap_ok
             if cfg.exchange == "auto":
                 ok = ok & (active_prev <= jnp.int32(auto_thresh))
+            if adaptive:
+                # controller override: 1 forces sparse (the capacity
+                # veto still applies — exactness over preference),
+                # 2 forces dense, 0 keeps the mode's own heuristic
+                ok = jnp.where(force_ex == jnp.int32(1), cap_ok, ok)
+                ok = ok & jnp.logical_not(force_ex == jnp.int32(2))
             # the all_to_all shapes differ between branches, so every
             # rank must take the same one: agree globally (pmin of the
             # local votes — a rank whose buckets overflow vetoes).
             # Votes are pinned to strong int32: a weak-typed Python
             # scalar here would thread promotion through the carry
-            # (jaxpr lint rule 'weak-scalar')
-            use_sp = jax.lax.pmin(
-                jnp.where(ok, jnp.int32(1), jnp.int32(0)), all_axes
-            ) > jnp.int32(0)
+            # (jaxpr lint rule 'weak-scalar').  Lane 1 piggybacks the
+            # capacity-overflow vote for the consecutive-overflow
+            # streak, so the streak costs no extra collective round.
+            over_local = row_overflow | ex_overflow
+            votes = jnp.stack([
+                jnp.where(ok, jnp.int32(1), jnp.int32(0)),
+                jnp.where(over_local, jnp.int32(0), jnp.int32(1)),
+            ])
+            gvote = jax.lax.pmin(votes, all_axes)
+            use_sp = gvote[0] > jnp.int32(0)
+            overflow_g = gvote[1] == jnp.int32(0)
 
             def exchange_sparse(_):
                 recv = jax.lax.all_to_all(
@@ -412,6 +458,11 @@ def build_step(
             fallbacks = fallbacks + jnp.where(
                 use_sp, jnp.int32(0), jnp.int32(1)
             )
+            sp_used = jnp.where(use_sp, jnp.int32(1), jnp.int32(0))
+            streak = jnp.where(
+                overflow_g, streak + jnp.int32(1), jnp.int32(0)
+            )
+            max_streak = jnp.maximum(max_streak, streak)
 
         # ---- 6. fold into pending state T ------------------------------
         mine_ext = jnp.concatenate([mine, jnp.array([worst])])
@@ -421,7 +472,27 @@ def build_step(
             mineL_ext = jnp.concatenate([mineL, jnp.array([INF])])
             L = jnp.where(improved, mineL_ext, L)
 
-        if cfg.collect_metrics:
+        if adaptive:
+            # one stacked psum publishes the whole metrics window row
+            # (eligible class size, eligible ELL rows, live edge
+            # relaxations) in a single collective round
+            live = eligible[row_src][:, None] & (wgt < INF)
+            if sparse_mode:
+                erows = f_cnt
+            else:
+                erows = jnp.sum(eligible[row_src].astype(jnp.int32))
+            sums = jax.lax.psum(
+                jnp.stack([
+                    jnp.sum(eligible.astype(jnp.int32)),
+                    erows,
+                    jnp.sum(live.astype(jnp.int32)),
+                ]),
+                all_axes,
+            )
+            commits = commits + sums[0]
+            relax = relax + sums[2]
+            classes = classes + (kmin != last_key).astype(jnp.int32)
+        elif cfg.collect_metrics:
             live = eligible[row_src][:, None] & (wgt < INF)
             commits = commits + jax.lax.psum(
                 jnp.sum(eligible.astype(jnp.int32)), all_axes
@@ -439,8 +510,16 @@ def build_step(
             jnp.sum(pending_new.astype(jnp.int32)), all_axes
         )
 
+        if adaptive:
+            pend_w = pend_w.at[it].set(active)
+            elig_w = elig_w.at[it].set(sums[0])
+            rows_w = rows_w.at[it].set(sums[1])
+            sparse_w = sparse_w.at[it].set(sp_used)
+            return (D, T, L, it + 1, active, commits, relax, classes,
+                    kmin, fallbacks, streak, max_streak,
+                    pend_w, elig_w, rows_w, sparse_w)
         return (D, T, L, it + 1, active, commits, relax, classes, kmin,
-                fallbacks)
+                fallbacks, streak, max_streak)
 
     def cond(carry):
         it, active = carry[3], carry[4]
@@ -452,20 +531,52 @@ def build_step(
             jnp.int32(0), jnp.int32(1),
             jnp.int32(0), jnp.int32(0), jnp.int32(0),
             jnp.float32(jnp.nan),
-            jnp.int32(0),
+            jnp.int32(0), jnp.int32(0), jnp.int32(0),
         )
-        body = functools.partial(step, row_src, col, wgt)
+        body = functools.partial(step, row_src, col, wgt, None)
         carry = jax.lax.while_loop(cond, lambda c: body(c), carry)
         (D, T, L, it, active, commits, relax, classes, _,
-         fallbacks) = carry
+         fallbacks, _streak, max_streak) = carry
         # `active` == 0 iff the loop converged (vs. truncation at
         # max_iters); `fallbacks` = supersteps on which a
         # sparse-capable mode used the dense exchange (capacity
         # overflow, the auto pending heuristic, or the static
-        # can't-pay shortcut).
-        return D[:n_local], it, commits, relax, classes, active, fallbacks
+        # can't-pay shortcut); `max_streak` = longest run of
+        # consecutive capacity-overflow supersteps (0 in dense modes).
+        return (D[:n_local], it, commits, relax, classes, active,
+                fallbacks, max_streak)
 
-    return loop
+    def segment(row_src, col, wgt, D, T, L,
+                active0, last_key0, streak0, limit, delta_dyn, force_ex):
+        """One adaptive segment: at most ``limit`` (≤ adapt_window)
+        supersteps with the given dynamic tunables, returning full
+        (D, T, L) for continuation plus segment-local counters and the
+        per-superstep metrics window."""
+        zw = jnp.zeros((cfg.adapt_window,), jnp.int32)
+        carry = (
+            D, T, L,
+            jnp.int32(0), active0,
+            jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            last_key0,
+            jnp.int32(0), streak0, jnp.int32(0),
+            zw, zw, zw, zw,
+        )
+
+        def seg_cond(c):
+            return (c[4] > 0) & (c[3] < limit)
+
+        body = functools.partial(
+            step, row_src, col, wgt, (delta_dyn, force_ex)
+        )
+        carry = jax.lax.while_loop(seg_cond, lambda c: body(c), carry)
+        (D, T, L, it, active, commits, relax, classes, last_key,
+         fallbacks, streak, max_streak,
+         pend_w, elig_w, rows_w, sparse_w) = carry
+        return (D, T, L, it, commits, relax, classes, active, fallbacks,
+                last_key, streak, max_streak,
+                pend_w, elig_w, rows_w, sparse_w)
+
+    return segment if adaptive else loop
 
 
 def make_engine(
@@ -498,6 +609,40 @@ def make_engine(
     )
 
     loop = build_step(cfg, axis_names, mesh_shape, n_local, n_parts)
+    shard = P(axis_names)  # leading axis split over the whole mesh
+
+    if cfg.adapt_window > 0:
+        if batch is not None:
+            raise ValueError(
+                "adaptive segment engines (adapt_window > 0) do not "
+                "support batched sources; solve one query at a time "
+                "or use a static spec for solve_batch"
+            )
+
+        def local_seg(row_src, col, wgt, D, T, L,
+                      active0, last_key0, streak0, limit, delta, force):
+            out = loop(row_src[0], col[0], wgt[0], D[0], T[0], L[0],
+                       active0, last_key0, streak0, limit, delta, force)
+            return (out[0][None], out[1][None], out[2][None]) + out[3:]
+
+        sharded_seg = shard_map(
+            local_seg,
+            mesh=mesh,
+            in_specs=(shard,) * 6 + (P(),) * 6,
+            out_specs=(shard,) * 3 + (P(),) * 13,
+        )
+
+        @jax.jit
+        def solve_segment(row_src, col, wgt, D0, T0, L0,
+                          active0, last_key0, streak0, limit, delta,
+                          force):
+            if trace_hook is not None:
+                trace_hook()
+            return sharded_seg(row_src, col, wgt, D0, T0, L0,
+                               active0, last_key0, streak0, limit,
+                               delta, force)
+
+        return solve_segment
 
     if batch is None:
         def local(row_src, col, wgt, D, T, L):
@@ -512,12 +657,11 @@ def make_engine(
             out = vloop(row_src[0], col[0], wgt[0], D[0], T[0], L[0])
             return (out[0][None],) + out[1:]
 
-    shard = P(axis_names)  # leading axis split over the whole mesh
     sharded = shard_map(
         local,
         mesh=mesh,
         in_specs=(shard, shard, shard, shard, shard, shard),
-        out_specs=(shard,) + (P(),) * 6,
+        out_specs=(shard,) + (P(),) * 7,
     )
 
     @jax.jit

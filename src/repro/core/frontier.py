@@ -67,6 +67,13 @@ def frontier_caps(
     return row_cap, slot_cap
 
 
+def grow_frontier_cap(rows: int, cap: int) -> int:
+    """Next rho-stepping row capacity after overflow: double, clamped
+    to the per-device ELL row count (beyond which compaction is moot
+    and the dense sweep is strictly cheaper)."""
+    return min(int(rows), max(1, int(cap)) * 2)
+
+
 def compact_rows(mask: jax.Array, cap: int):
     """Compact a (R,) bool mask into a capacity-``cap`` index list.
 

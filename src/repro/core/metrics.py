@@ -30,6 +30,13 @@ class WorkMetrics:
     #   exchange mode ('sparse'/'auto') used the dense path instead —
     #   capacity overflow, the auto pending-count heuristic, or auto's
     #   static can't-pay shortcut; 0 in plain dense modes
+    overflow_streak: int = 0  # longest run of *consecutive* supersteps
+    #   on which sparse capacity (row or slot) overflowed somewhere —
+    #   the signal behind the actionable frontier_cap RuntimeWarning
+    retraces: int = 0  # engine re-traces forced by shape-changing
+    #   adaptive decisions (new frontier_cap) during this solve; 0 for
+    #   static solves and for adaptive solves that only touched
+    #   dynamic scalars (delta, exchange force)
 
     def waste_ratio(self) -> float:
         """Relaxations per useful commit — the paper's redundant-work axis."""
@@ -46,6 +53,37 @@ class WorkMetrics:
             f"xbytes={self.exchange_bytes}"
             + ("" if self.converged else " TRUNCATED")
         )
+
+
+@dataclasses.dataclass
+class SuperstepWindow:
+    """Bounded per-superstep metrics window published by an adaptive
+    segment engine (``EngineConfig.adapt_window > 0``) — the
+    observation a :mod:`repro.tune` controller policy maps to the next
+    segment's tunables.  Lists hold one entry per superstep actually
+    executed in the segment (``<= adapt_window``), all global
+    (psum'd) counts; byte costs are reconstructed host-side from the
+    sparse/dense choice and the segment's static capacities, so the
+    window itself stays int32 on device."""
+
+    pending: list          # global pending workitems after each superstep
+    eligible: list         # global eligible-class size per superstep
+    rows: list             # global eligible ELL rows per superstep
+    sparse_used: list      # 1 iff the sparse exchange ran that superstep
+    bytes_moved: list      # exchange bytes per superstep (host-derived)
+    overflow_streak: int   # consecutive-overflow run live at segment end
+    supersteps_total: int  # supersteps executed since solve start
+    n: int                 # global padded vertex count (P * n_local)
+    rows_per_rank: int     # ELL rows per device (frontier_cap ceiling)
+    sparse_capable: bool   # exchange mode is 'sparse' or 'auto'
+
+    def last_pending(self) -> int:
+        return int(self.pending[-1]) if self.pending else 0
+
+    def mean_eligible(self) -> float:
+        if not self.eligible:
+            return 0.0
+        return sum(self.eligible) / len(self.eligible)
 
 
 @dataclasses.dataclass

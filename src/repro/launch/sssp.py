@@ -156,7 +156,12 @@ def main() -> None:
         ]
 
     t0 = time.time()
-    sols = solver.solve_batch(problems)
+    if cfg.adapt is not None and len(problems) > 1:
+        # solve_batch rejects adaptive specs (one shared controller
+        # schedule would steer every lane); solve them one at a time
+        sols = [solver.solve(pb) for pb in problems]
+    else:
+        sols = solver.solve_batch(problems)
     wall = time.time() - t0
     print(f"[sssp] spec={cfg.name} batch={len(problems)}")
     for label, sol in zip(labels, sols):

@@ -24,6 +24,15 @@ Query kinds:
   index can't bound it (no index, directed graph, unreachable hubs)
   the query silently escalates to the exact path.
 
+When constructed with a ``tuned`` :class:`repro.tune.TunedSpecCache`,
+admission consults it per flush: if the current graph's fingerprint
+has a tuned record whose spec differs from the default solver's, the
+flush batch-solves with a memoized solver built from the tuned spec
+(and keys the solution cache under the tuned config name, so tuned
+and default answers never alias).  Fingerprints are hash-chain aware,
+so a streamed update automatically falls back to the default solver
+until the mutated graph is re-tuned.
+
 The router is synchronous and single-threaded by design — the engine
 itself is the concurrency (one batched solve serves B queries); an
 injectable ``clock`` makes the timeout trigger testable without
@@ -34,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, Optional, Sequence
 
 from repro.api import Problem, SingleSource, Solver
 from repro.api.solver import Solution
@@ -42,6 +51,9 @@ from repro.core.metrics import LatencyStats
 from repro.graph.formats import Graph, graph_fingerprint
 from repro.serve.cache import SolutionCache
 from repro.serve.landmarks import LandmarkIndex
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.tune.autotune import TunedSpecCache
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +112,7 @@ class RouterStats:
     batched_solves: int = 0     # uncached sources actually solved
     landmark_served: int = 0
     escalations: int = 0        # estimate queries the index couldn't bound
+    tuned_batches: int = 0      # flushes served by a tuned-spec solver
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -113,6 +126,7 @@ class Router:
         *,
         cache: Optional[SolutionCache] = None,
         landmarks: Optional[LandmarkIndex] = None,
+        tuned: Optional["TunedSpecCache"] = None,
         max_batch: int = 8,
         max_wait_s: float = 0.01,
         clock: Callable[[], float] = time.monotonic,
@@ -123,11 +137,13 @@ class Router:
         self.graph = graph
         self.cache = cache if cache is not None else SolutionCache()
         self.landmarks = landmarks
+        self.tuned = tuned
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self.clock = clock
         self.stats = RouterStats()
         self._pending: list[Ticket] = []
+        self._tuned_solvers: dict = {}  # tuned spec -> memoized Solver
 
     # -- admission ----------------------------------------------------
 
@@ -169,7 +185,10 @@ class Router:
             return 0
         self.stats.batches += 1
         fp = graph_fingerprint(self.graph)
-        cfg_name = self.solver.config.name
+        solver = self._solver_for(fp)
+        if solver is not self.solver:
+            self.stats.tuned_batches += 1
+        cfg_name = solver.config.name
 
         # one solution per distinct (source, processing); cache first
         need: dict = {}
@@ -193,7 +212,12 @@ class Router:
                 Problem(self.graph, SingleSource(src), processing=proc)
                 for (src, proc) in group
             ]
-            solved = self.solver.solve_batch(problems)
+            if solver.config.adapt is not None and len(problems) > 1:
+                # adaptive solves are unbatchable (segmented engine);
+                # serve the flush sequentially instead
+                solved = [solver.solve(pb) for pb in problems]
+            else:
+                solved = solver.solve_batch(problems)
             self.stats.batched_solves += len(solved)
             for (skey, sol) in zip(group, solved):
                 self.cache.put(need[skey], sol)
@@ -216,6 +240,24 @@ class Router:
         return len(tickets)
 
     # -- internals ----------------------------------------------------
+
+    def _solver_for(self, fp) -> Solver:
+        """The solver this flush should use: the tuned-spec solver when
+        the tuned cache has a record for the graph's current
+        fingerprint with a spec that differs from the default, else
+        the router's default solver.  Tuned solvers are memoized per
+        spec (they share the process-wide engine cache, but partition
+        memos and stats live on the Solver)."""
+        if self.tuned is None:
+            return self.solver
+        rec = self.tuned.get(fp)
+        if rec is None or rec.spec == self.solver.config.name:
+            return self.solver
+        s = self._tuned_solvers.get(rec.spec)
+        if s is None:
+            s = Solver(rec.spec, mesh=self.solver.mesh)
+            self._tuned_solvers[rec.spec] = s
+        return s
 
     def _try_landmark(self, ticket: Ticket) -> bool:
         q = ticket.query

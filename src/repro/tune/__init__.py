@@ -1,0 +1,52 @@
+"""repro.tune — adaptive execution controller + offline spec auto-tuner.
+
+The runtime half of the paper's "generate the algorithm for the
+target architecture" story (arXiv 1706.05760 §VII), made safe by
+self-stabilization: retuning the ordering mid-solve reorders the
+schedule but cannot move the kernel's fixpoint.
+
+* **Runtime controller** (``/adapt[:policy]`` in the spec grammar):
+  the engine runs in segments (``EngineConfig.adapt_window``
+  supersteps per jitted call) and publishes a per-superstep metrics
+  window; a :mod:`policy <repro.tune.policies>` maps the window to
+  the next segment's delta bucket width, frontier capacity
+  (rho-stepping growth on overflow) and sparse/dense exchange choice.
+  Delta and the exchange choice are dynamic scalars (no retrace);
+  only a never-seen ``frontier_cap`` compiles a new segment engine
+  (counted in ``Solution.metrics.retraces``).
+
+* **Offline auto-tuner** (:class:`AutoTuner`): coordinate-descent
+  search over ordering x exchange x partitioner scored by pilot
+  solves, winner cached in a :class:`TunedSpecCache` keyed by graph
+  fingerprint (hash-chain aware, so streamed updates re-tune).
+  ``repro.serve.Router`` consults the cache on admission;
+  ``launch/tune.py`` is the CLI.
+"""
+
+from repro.tune.policies import (
+    Decision,
+    RhoPolicy,
+    ScheduledPolicy,
+    StaticPolicy,
+    Tunables,
+    TunePolicy,
+    canonical_policy,
+    make_tune_policy,
+    policy_traits,
+    register_tune_policy,
+)
+from repro.tune.controller import AdaptReport, run_adaptive
+from repro.tune.autotune import (
+    OBJECTIVES,
+    AutoTuner,
+    TunedRecord,
+    TunedSpecCache,
+)
+
+__all__ = [
+    "Decision", "RhoPolicy", "ScheduledPolicy", "StaticPolicy",
+    "Tunables", "TunePolicy", "canonical_policy", "make_tune_policy",
+    "policy_traits", "register_tune_policy",
+    "AdaptReport", "run_adaptive",
+    "OBJECTIVES", "AutoTuner", "TunedRecord", "TunedSpecCache",
+]

@@ -185,5 +185,37 @@ def test_sparse_pallas_interpret_relax(tiny_graphs, mesh1):
     assert close(ref, sol.state)
 
 
+def test_consecutive_overflow_warns_actionably(tiny_graphs, mesh1):
+    """A frontier_cap so small every superstep falls back dense must
+    produce ONE RuntimeWarning naming the spec and suggesting both a
+    larger cap and /adapt:rho — not a warning per superstep."""
+    g = tiny_graphs[0]
+    solver = Solver(
+        SolverConfig(root="delta:5", exchange="sparse", frontier_cap=1),
+        mesh=mesh1,
+    )
+    with pytest.warns(RuntimeWarning, match="frontier_cap") as rec:
+        sol = solver.solve(Problem(g, SingleSource(0)))
+    overflow = [w for w in rec
+                if "consecutive supersteps" in str(w.message)]
+    assert len(overflow) == 1
+    msg = str(overflow[0].message)
+    assert "delta:5+buffer/sparse" in msg  # names the spec
+    assert "/adapt:rho" in msg             # names the adaptive cure
+    assert sol.metrics.overflow_streak >= 3
+    # a schedule whose frontier fits (dijkstra drains one class at a
+    # time here) stays below the streak threshold and stays quiet
+    import warnings as _w
+
+    with _w.catch_warnings(record=True) as quiet:
+        _w.simplefilter("always")
+        sol2 = Solver(
+            SolverConfig(root="dijkstra", exchange="sparse"), mesh=mesh1
+        ).solve(Problem(g, SingleSource(0)))
+    assert sol2.metrics.overflow_streak < 3
+    assert not [w for w in quiet
+                if "consecutive supersteps" in str(w.message)]
+
+
 # Property-based sparse-vs-dense equivalence on arbitrary random
 # graphs lives in tests/test_frontier_property.py (needs hypothesis).

@@ -1,0 +1,403 @@
+"""repro.tune: the /adapt spec grammar, controller policies, adaptive
+vs static bit-identity, retrace accounting, the offline auto-tuner +
+tuned-spec cache, Router admission, and the launch CLI.
+
+Single-device fast tests here; the 8-device adaptive smoke runs in a
+subprocess (marked slow) like the other multi-device coverage.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api.solver as fac
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference
+from repro.graph import chain_fingerprint, graph_fingerprint, rmat1
+from repro.serve import EdgeUpdate, Query, Router
+from repro.tune import (
+    AutoTuner,
+    StaticPolicy,
+    TunedRecord,
+    TunedSpecCache,
+    canonical_policy,
+    make_tune_policy,
+    policy_traits,
+    register_tune_policy,
+)
+
+
+def close(a, b):
+    return np.allclose(
+        np.where(np.isinf(a), -1, a), np.where(np.isinf(b), -1, b)
+    )
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+@pytest.fixture(scope="module")
+def g8():
+    return rmat1(8, seed=3)
+
+
+# ------------------------------------------------------------- grammar
+
+
+def test_adapt_spec_parses_and_round_trips():
+    cfg = SolverConfig.from_spec("delta:5/sparse/adapt")
+    assert cfg.adapt == "rho"  # bare /adapt defaults to rho
+    assert cfg.exchange == "sparse"
+    assert cfg.name == "delta:5+buffer/sparse/adapt:rho"
+    assert SolverConfig.from_spec(cfg.name) == cfg
+
+    cfg = SolverConfig.from_spec("delta:5/adapt:static")
+    assert cfg.adapt == "static" and cfg.exchange == "a2a"
+    assert SolverConfig.from_spec(cfg.name) == cfg
+
+    # policy args canonicalize and survive the round trip
+    cfg = SolverConfig.from_spec("delta:5/auto/adapt:rho:0.05@ebal")
+    assert cfg.adapt == "rho:0.05" and cfg.partition == "ebal"
+    assert cfg.name == "delta:5+buffer/auto/adapt:rho:0.05@ebal"
+    assert SolverConfig.from_spec(cfg.name) == cfg
+
+    # segment order is free: /adapt before the exchange parses too
+    assert (SolverConfig.from_spec("delta:5/adapt:rho/sparse")
+            == SolverConfig.from_spec("delta:5/sparse/adapt:rho"))
+
+
+def test_adapt_spec_errors():
+    with pytest.raises(ValueError, match="duplicate adapt"):
+        SolverConfig.from_spec("delta:5/adapt/adapt:static")
+    with pytest.raises(ValueError, match="empty adapt policy"):
+        SolverConfig.from_spec("delta:5/adapt:")
+    # typo'd segment gets a did-you-mean pointing at 'adapt'
+    with pytest.raises(ValueError, match="did you mean 'adapt'"):
+        SolverConfig.from_spec("delta:5/adpat")
+    # unknown policy: did-you-mean from the policy registry
+    with pytest.raises(ValueError, match="did you mean 'rho'"):
+        SolverConfig.from_spec("delta:5/adapt:rh")
+    with pytest.raises(ValueError, match="takes no argument"):
+        SolverConfig.from_spec("delta:5/adapt:static:1")
+    with pytest.raises(ValueError, match="adapt_window"):
+        SolverConfig(adapt="rho", adapt_window=0)
+    # adapt_window is engine-relevant only under /adapt: equality
+    assert (SolverConfig.from_spec("delta:5/adapt", adapt_window=2)
+            != SolverConfig.from_spec("delta:5/adapt", adapt_window=8))
+
+
+def test_policy_registry():
+    assert canonical_policy("rho") == "rho"
+    assert canonical_policy(" rho:0.25 ") == "rho:0.25"
+    assert policy_traits("rho") == dict(grows_cap=True,
+                                        retunes_delta=True)
+    assert policy_traits("static")["grows_cap"] is False
+    # fresh instance per solve (policies may carry state)
+    assert make_tune_policy("static") is not make_tune_policy("static")
+    with pytest.raises(ValueError, match="target_frac"):
+        make_tune_policy("rho:7.0")
+    with pytest.raises(ValueError, match="float target fraction"):
+        make_tune_policy("rho:wide")
+    with pytest.raises(ValueError, match="invalid policy name"):
+        register_tune_policy("a/b", lambda arg: StaticPolicy())
+
+
+# ------------------------------------------- adaptive == static exact
+
+
+@pytest.mark.parametrize("spec", [
+    "delta:5/a2a",
+    "delta:5+threadq/sparse",
+    "delta:3/auto",
+    "dijkstra/a2a",
+    "delta:5 > chunk:delta:1 /sparse",
+])
+def test_adaptive_static_policy_is_bit_identical(g8, mesh1, spec):
+    """/adapt:static runs the segmented engine with an unchanged
+    schedule: state AND work metrics must match the classic loop."""
+    prob = Problem(g8, SingleSource(0))
+    st = Solver(spec, mesh=mesh1).solve(prob)
+    ad = Solver(
+        SolverConfig.from_spec(f"{spec}/adapt:static", adapt_window=3),
+        mesh=mesh1,
+    ).solve(prob)
+    assert np.array_equal(st.state, ad.state)  # bit-identical
+    assert st.metrics.supersteps == ad.metrics.supersteps
+    assert st.metrics.commits == ad.metrics.commits
+    assert st.metrics.relaxations == ad.metrics.relaxations
+    assert ad.metrics.retraces == 0
+
+
+def test_adaptive_rho_grows_cap_and_stays_exact(g8, mesh1):
+    """From a deliberately tiny frontier_cap, rho must double its way
+    out (retraces > 0) and still land on the exact fixpoint."""
+    ref = dijkstra_reference(g8, 0)
+    cfg = SolverConfig.from_spec(
+        "delta:5/sparse/adapt:rho", frontier_cap=1
+    )
+    solver = Solver(cfg, mesh=mesh1)
+    sol = solver.solve(Problem(g8, SingleSource(0)))
+    assert close(ref, sol.state)
+    assert sol.metrics.retraces > 0
+    assert sol.metrics.converged
+    st = solver.stats()["adapt"]
+    assert st["solves"] == 1
+    assert st["cap_growths"] > 0 and st["retraces"] > 0
+
+
+def test_adaptive_solve_batch_raises(g8, mesh1):
+    solver = Solver("delta:5/adapt", mesh=mesh1)
+    probs = [Problem(g8, SingleSource(v)) for v in (0, 5)]
+    with pytest.raises(ValueError, match="adaptive specs"):
+        solver.solve_batch(probs)
+    # a singleton batch routes through solve() and is fine
+    (sol,) = solver.solve_batch(probs[:1])
+    assert close(dijkstra_reference(g8, 0), sol.state)
+
+
+# ------------------------------------------------- retrace accounting
+
+
+def test_adaptive_solves_do_not_retrace_per_superstep(g8, mesh1):
+    """The compile-once contract under /adapt: one solve traces at
+    most a handful of segment engines (one per distinct frontier_cap),
+    never one per superstep, and a repeat solve traces nothing."""
+    cfg = SolverConfig.from_spec(
+        "delta:5/sparse/adapt:rho", frontier_cap=2, adapt_window=2
+    )
+    solver = Solver(cfg, mesh=mesh1)
+    prob = Problem(g8, SingleSource(0))
+    t0 = fac.trace_count()
+    sol = solver.solve(prob)
+    first = fac.trace_count() - t0
+    assert sol.metrics.supersteps > 4  # multiple segments ran
+    assert 1 <= first <= 1 + sol.metrics.retraces
+    assert first < sol.metrics.supersteps
+    t1 = fac.trace_count()
+    sol2 = solver.solve(prob)
+    assert fac.trace_count() == t1  # warm: zero new traces
+    assert np.array_equal(sol.state, sol2.state)
+
+
+def test_engine_cache_info_counters(g8, mesh1, monkeypatch):
+    info0 = fac.engine_cache_info()
+    assert info0["capacity"] == fac._ENGINE_CACHE_SIZE
+    # adaptive cap growth shows up in the process-wide counter
+    Solver(
+        SolverConfig.from_spec("delta:5/sparse/adapt:rho",
+                               frontier_cap=1),
+        mesh=mesh1,
+    ).solve(Problem(g8, SingleSource(0)))
+    assert fac.engine_cache_info()["adapt_retraces"] \
+        > info0["adapt_retraces"]
+    # shrink the cache: distinct static configs must evict LRU-style
+    monkeypatch.setattr(fac, "_ENGINE_CACHE_SIZE", 2)
+    fac.engine_cache_clear()
+    ev0 = fac.engine_cache_info()["evictions"]
+    for delta in (2, 3, 5, 7):
+        Solver(f"delta:{delta}/a2a", mesh=mesh1).solve(
+            Problem(g8, SingleSource(0))
+        )
+        assert fac.engine_cache_info()["size"] <= 2
+    assert fac.engine_cache_info()["evictions"] > ev0
+
+
+def test_engine_cache_key_covers_controller_config(g8, mesh1):
+    """Same spec with and without /adapt must be distinct engines —
+    the cache key includes adapt_window via EngineConfig."""
+    fac.engine_cache_clear()
+    Solver("delta:5/a2a", mesh=mesh1).solve(
+        Problem(g8, SingleSource(0))
+    )
+    size_static = fac.engine_cache_info()["size"]
+    Solver("delta:5/a2a/adapt:static", mesh=mesh1).solve(
+        Problem(g8, SingleSource(0))
+    )
+    assert fac.engine_cache_info()["size"] > size_static
+
+
+# ------------------------------------------------------- spec lint
+
+
+def test_spec_check_adaptive_rules():
+    from repro.analyze.spec_check import check_config, explain_config
+
+    rules = {f.rule for f in check_config("delta:5/sparse/adapt:static")}
+    assert "adapt-no-cap-growth" in rules
+    rules = {f.rule for f in check_config("dijkstra/a2a/adapt:rho")}
+    assert "adapt-nothing-to-tune" in rules
+    rules = {f.rule for f in check_config(
+        "delta:5 > chunk:topk:4 /a2a/adapt:rho"
+    )}
+    assert "adapt-topk-drain" in rules
+    # a sensible adaptive spec trips none of the adapt rules
+    rules = {f.rule for f in check_config("delta:5/sparse/adapt:rho")}
+    assert not {r for r in rules if r.startswith("adapt-")}
+    plan = explain_config("delta:5/sparse/adapt:rho")
+    assert "controller: adapt:rho" in plan
+    assert "frontier_cap" in plan
+
+
+# ------------------------------------------------------- auto-tuner
+
+
+def test_autotuner_search_and_cache(g8, mesh1):
+    tuner = AutoTuner(mesh1, quick=True, pilot_iters=400)
+    rec = tuner.search(g8)
+    assert rec.spec and rec.objective == "model"
+    # leaderboard is score-sorted with the winner on top
+    scores = [r["score"] for r in rec.leaderboard]
+    assert scores == sorted(scores)
+    assert rec.leaderboard[0]["spec"] == rec.spec
+    assert tuner.pilots_run == len(rec.leaderboard)
+    # tune() is a cache hit: no new pilots, production config returned
+    n = tuner.pilots_run
+    cfg = tuner.tune(g8)
+    assert tuner.pilots_run == n
+    assert cfg == SolverConfig.from_spec(rec.spec)
+    assert cfg.max_iters == SolverConfig().max_iters  # not pilot cap
+
+
+def test_autotuner_objective_validation(mesh1):
+    with pytest.raises(ValueError, match="did you mean 'supersteps'"):
+        AutoTuner(mesh1, objective="superstep")
+
+
+def test_tuned_cache_chain_fingerprint_invalidation(mesh1):
+    """A streamed update moves the graph's fingerprint, so the tuned
+    record stops matching and the next tune() re-searches."""
+    g = rmat1(8, seed=9)  # private: chain_fingerprint mutates registry
+    tuner = AutoTuner(mesh1, quick=True, pilot_iters=400)
+    tuner.search(g)
+    assert graph_fingerprint(g) in tuner.cache
+    chain_fingerprint(g, EdgeUpdate(0, 1, 0.5).record())
+    assert graph_fingerprint(g) not in tuner.cache
+    n = tuner.pilots_run
+    tuner.tune(g)
+    assert tuner.pilots_run > n  # cache miss -> fresh search
+
+
+def test_tuned_cache_save_load_invalidate(tmp_path):
+    cache = TunedSpecCache()
+    rec = TunedRecord(
+        spec="delta:10/sparse", objective="model", score=1.5,
+        fingerprint=(1, 2, 3),
+        leaderboard=[dict(spec="delta:10/sparse", score=1.5)],
+    )
+    cache.put(rec)
+    path = str(tmp_path / "tuned.json")
+    cache.save(path)
+    back = TunedSpecCache.load(path)
+    assert len(back) == 1 and (1, 2, 3) in back
+    got = back.get((1, 2, 3))
+    assert got.spec == rec.spec and got.fingerprint == (1, 2, 3)
+    assert back.invalidate((1, 2, 3)) and len(back) == 0
+    assert not back.invalidate((1, 2, 3))
+
+
+# ------------------------------------------------------- serve + CLI
+
+
+def test_router_consults_tuned_cache(g8, mesh1):
+    ref = dijkstra_reference(g8, 0)
+    solver = Solver("delta:5+threadq/a2a", mesh=mesh1)
+    tuned = TunedSpecCache()
+    tuned.put(TunedRecord(
+        spec="delta:10+threadq/a2a", objective="model", score=0.0,
+        fingerprint=tuple(graph_fingerprint(g8)),
+    ))
+    router = Router(solver, g8, tuned=tuned, max_batch=4)
+    answers = router.serve([Query(0), Query(0, target=5), Query(7)])
+    assert router.stats.tuned_batches == 1
+    assert close(ref, answers[0].solution.state)
+    assert answers[1].distance == answers[0].solution.distance_to(5)
+    # the tuned solver is memoized, and cache keys carry its name —
+    # a second flush is a tuned-solver cache hit, not a re-solve
+    n = router.stats.batched_solves
+    answers = router.serve([Query(0)])
+    assert router.stats.batched_solves == n
+    assert answers[0].served_by == "cache"
+    # a record matching the default spec routes to the default solver
+    tuned.put(TunedRecord(
+        spec=solver.config.name, objective="model", score=0.0,
+        fingerprint=tuple(graph_fingerprint(g8)),
+    ))
+    t = router.stats.tuned_batches
+    router.serve([Query(3)])
+    assert router.stats.tuned_batches == t
+
+
+def test_router_without_tuned_cache_unchanged(g8, mesh1):
+    solver = Solver("delta:5+threadq/a2a", mesh=mesh1)
+    router = Router(solver, g8)
+    answers = router.serve([Query(0)])
+    assert answers[0].served_by == "batch"
+    assert router.stats.tuned_batches == 0
+
+
+def test_launch_tune_cli_roundtrip(tmp_path, capsys):
+    from repro.launch.tune import main
+
+    cache = str(tmp_path / "TUNE_cache.json")
+    export = str(tmp_path / "export.json")
+    main(["--search", "--quick", "--graph", "rmat1", "--scale", "8",
+          "--pilot-iters", "400", "--cache", cache])
+    main(["--inspect", "--export", export, "--cache", cache])
+    out = capsys.readouterr().out
+    assert "[tune] searching" in out and "exported 1 records" in out
+    back = TunedSpecCache.load(export)
+    assert len(back) == 1
+    rec = back.records()[0]
+    assert SolverConfig.from_spec(rec.spec)  # parseable winner
+
+
+# ------------------------------------------------- 8-device subprocess
+
+CHILD_ADAPT = r"""
+import numpy as np, jax, warnings
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.core import dijkstra_reference
+from repro.graph import rmat1
+
+warnings.simplefilter("ignore", RuntimeWarning)
+assert jax.device_count() == 8, jax.device_count()
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+g = rmat1(8, seed=7)
+ref = dijkstra_reference(g, 0)
+prob = Problem(g, SingleSource(0))
+static = Solver("delta:5/sparse", mesh=mesh).solve(prob)
+solver = Solver(
+    SolverConfig.from_spec("delta:5/sparse/adapt:rho", frontier_cap=2),
+    mesh=mesh,
+)
+sol = solver.solve(prob)
+assert np.allclose(np.where(np.isinf(ref), -1, ref),
+                   np.where(np.isinf(sol.state), -1, sol.state))
+assert sol.metrics.converged
+assert sol.metrics.retraces > 0, sol.metrics.retraces
+# exactness across ranks: adaptive fixpoint == static fixpoint, bitwise
+assert np.array_equal(sol.state, static.state)
+eq = Solver("delta:5/sparse/adapt:static", mesh=mesh).solve(prob)
+assert np.array_equal(eq.state, static.state)
+assert eq.metrics.supersteps == static.metrics.supersteps
+print("ADAPT8_OK", sol.metrics.supersteps, sol.metrics.retraces)
+"""
+
+
+@pytest.mark.slow
+def test_adaptive_eight_device_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", CHILD_ADAPT], env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ADAPT8_OK" in r.stdout

@@ -1,0 +1,73 @@
+"""Property test: retuning safety of the adaptive controller
+(hypothesis; skips itself when the optional dep is absent).
+
+The paper's self-stabilization argument says the kernel's fixpoint is
+unique and mid-solve retuning only reorders the schedule.  Machine-
+check it: for ARBITRARY controller schedules (delta rescales, frontier
+cap jumps, exchange forcing, any segment window), the adaptive solve
+must land bit-identically on the static solve's state.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
+)
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from repro.api import Problem, SingleSource, Solver, SolverConfig  # noqa: E402
+from repro.tune import Decision, ScheduledPolicy  # noqa: E402
+from repro.tune.controller import run_adaptive  # noqa: E402
+from repro.graph import rmat1  # noqa: E402
+
+MESH = jax.make_mesh((1,), ("data",))
+GRAPH = rmat1(8, seed=3)
+
+decisions = st.builds(
+    Decision,
+    delta=st.one_of(
+        st.none(),
+        st.sampled_from([1.0, 2.5, 5.0, 10.0, 40.0]),
+    ),
+    frontier_cap=st.one_of(
+        st.none(), st.sampled_from([1, 2, 4, 8, 64])
+    ),
+    exchange_force=st.one_of(st.none(), st.sampled_from([0, 1, 2])),
+)
+
+
+@settings(
+    max_examples=15,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    schedule=st.lists(decisions, max_size=6),
+    window=st.integers(min_value=1, max_value=5),
+)
+def test_any_retuning_schedule_is_bit_identical(schedule, window):
+    static = Solver("delta:5/sparse", mesh=MESH).solve(
+        Problem(GRAPH, SingleSource(0))
+    )
+    cfg = SolverConfig.from_spec(
+        "delta:5/sparse", adapt="static", adapt_window=window,
+        frontier_cap=2,
+    )
+    solver = Solver(cfg, mesh=MESH)
+    pg = solver.partition(GRAPH)
+    prob = Problem(GRAPH, SingleSource(0))
+    ecfg = cfg.engine_config(prob.processing_fn)
+    from repro.core.engine import initial_state
+
+    D0, T0, L0 = initial_state(pg, prob.processing_fn,
+                               prob.source_items())
+    state, metrics, report = run_adaptive(
+        MESH, ecfg, pg, ScheduledPolicy(schedule), D0, T0, L0
+    )
+    assert metrics.converged
+    assert np.array_equal(
+        state.reshape(-1)[: GRAPH.n], np.asarray(static.state)
+    )
+    assert report.segments >= 1
