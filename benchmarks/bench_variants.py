@@ -201,6 +201,65 @@ print(json.dumps(rows))
 """
 
 
+CHILD_ROOFLINE = r"""
+import json, time, warnings
+import numpy as np, jax
+from repro.graph import rmat1
+from repro.api import Problem, SingleSource, Solver, SolverConfig
+from repro.api.problem import get_processing
+from repro.core import dijkstra_reference
+from repro.roofline import superstep_profile
+
+SCALE = %(scale)d
+rows = []
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+g = rmat1(SCALE, seed=7)
+ref = dijkstra_reference(g, 0)
+warnings.simplefilter("ignore", RuntimeWarning)
+base_state = None
+base_metrics = None
+for spec in ["delta:5/sparse", "delta:5/sparse/fused",
+             "delta:5/sparse/q:bf16"]:
+    cfg = SolverConfig.from_spec(spec, chunk_size=256)
+    solver = Solver(cfg, mesh=mesh)
+    prob = Problem(g, SingleSource(0))
+    sol = solver.solve(prob)          # compile + warm
+    t0 = time.perf_counter()
+    sol = solver.solve(prob)
+    wall_s = time.perf_counter() - t0
+    m = sol.metrics
+    ok = np.allclose(np.where(np.isinf(ref), -1, ref),
+                     np.where(np.isinf(sol.state), -1, sol.state))
+    assert ok, spec
+    if base_state is None:
+        base_state, base_metrics = np.asarray(sol.state), m.as_dict()
+    else:
+        # both the fused kernel and the quantized+repaired payload
+        # must reproduce the exact baseline bit-for-bit
+        assert np.array_equal(base_state, np.asarray(sol.state)), spec
+    if spec == "delta:5/sparse/fused":
+        assert m.as_dict() == base_metrics, (spec, m.as_dict())
+    rows.append(dict(graph="rmat1", scale=SCALE, spec=spec,
+                     ok=bool(ok), wall_s=wall_s,
+                     bytes_per_superstep=(
+                         m.exchange_bytes / max(1, m.supersteps)),
+                     **m.as_dict()))
+# the quantized payload must move strictly fewer bytes per superstep
+assert (rows[2]["bytes_per_superstep"]
+        < rows[0]["bytes_per_superstep"]), rows
+# op-wise per-superstep roofline: fusion must cut HBM bytes
+proc = get_processing("sssp")
+prof = {}
+for key, spec in [("unfused", "delta:5/sparse"),
+                  ("fused", "delta:5/sparse/fused")]:
+    ecfg = SolverConfig.from_spec(spec).engine_config(proc)
+    prof[key] = superstep_profile(ecfg)
+assert (prof["fused"]["hbm_bytes_per_superstep"]
+        < prof["unfused"]["hbm_bytes_per_superstep"]), prof
+print(json.dumps({"rows": rows, "roofline": prof, "ok": True}))
+"""
+
+
 def _run_child(child: str, timeout: int = 3000) -> list:
     """Run a benchmark child on 8 placeholder devices and parse its
     JSON rows (last stdout line)."""
@@ -254,6 +313,39 @@ def run_adaptive(scale: int = 10, quick: bool = False) -> list:
         "scale": scale,
         "quick": int(quick),
     })
+
+
+def run_roofline(scale: int = 10) -> dict:
+    """The kernel-fusion / quantized-exchange cell: exact sparse
+    baseline vs '/fused' vs '/q:bf16' on one RMAT (bit-identity
+    asserted in the child), plus the op-wise per-superstep HBM
+    roofline for the unfused and fused programs."""
+    return _run_child(CHILD_ROOFLINE % {"scale": scale})
+
+
+def main_roofline(
+    scale: int = 10, json_path: str | None = None
+) -> list[str]:
+    res = run_roofline(scale)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+    out = []
+    for r in res["rows"]:
+        name = f"roofline/{r['graph']}_s{r['scale']}/{r['spec']}"
+        derived = (
+            f"steps={r['supersteps']};xbytes={r['exchange_bytes']};"
+            f"bps={r['bytes_per_superstep']:.0f};"
+            f"repairs={r['repair_sweeps']}"
+        )
+        out.append(f"{name},{r['wall_s']*1e6:.1f},{derived}")
+    pu = res["roofline"]["unfused"]["hbm_bytes_per_superstep"]
+    pf = res["roofline"]["fused"]["hbm_bytes_per_superstep"]
+    out.append(
+        f"roofline/superstep_hbm_bytes,unfused={pu},fused={pf},"
+        f"saved={pu - pf}"
+    )
+    return out
 
 
 def main_adaptive(
@@ -353,8 +445,19 @@ if __name__ == "__main__":
                          "offline-tuned vs /adapt:rho on rmat1 + road) "
                          "and dump its rows as JSON "
                          "(default PATH: %(const)s)")
+    ap.add_argument("--roofline", nargs="?", const="BENCH_roofline.json",
+                    default=None, metavar="PATH",
+                    help="run ONLY the fusion/quantization cell "
+                         "(exact sparse vs /fused vs /q:bf16 on rmat1, "
+                         "bit-identity asserted, + per-superstep HBM "
+                         "roofline) and dump it as JSON "
+                         "(default PATH: %(const)s)")
     a = ap.parse_args()
     scale = a.scale if a.scale is not None else (9 if a.quick else 10)
+    if a.roofline:
+        for line in main_roofline(scale, json_path=a.roofline):
+            print(line)
+        sys.exit(0)
     if a.adaptive:
         for line in main_adaptive(scale, quick=a.quick,
                                   json_path=a.adaptive):

@@ -28,6 +28,10 @@ does not catch:
   dead-branch          a cond whose predicate is a trace-time literal
                        — one side is dead code that still costs trace
                        time and obscures the spec grid.
+  fused-kernel-escape  relax_impl requests the fused superstep kernel
+                       but the traced step contains no pallas_call —
+                       the engine silently fell back to the reference
+                       relax path.
 
 Each finding carries the engine source line (from jaxpr source_info)
 when available.  ``lint_grid`` dedupes traces across the spec grid:
@@ -48,7 +52,7 @@ from jax.sharding import PartitionSpec as P
 from repro.analyze.findings import Finding
 from repro.compat import shard_map
 from repro.core.engine import EngineConfig, build_step
-from repro.core.frontier import frontier_caps
+from repro.core.frontier import frontier_caps, payload_plane_words
 
 #: primitives that force a host round-trip
 _HOST_PRIMS = (
@@ -216,17 +220,19 @@ def lint_engine(
         sh.rows, sh.width, sh.n_local, sh.n_parts, cfg.frontier_cap
     )
     use_level = cfg.hierarchy.needs_level
-    kplanes = 3 if use_level else 2
     nplanes = 2 if use_level else 1
     expected_a2a_ax1 = {
-        kplanes * slot_cap,          # sparse payload planes
+        payload_plane_words(slot_cap, use_level, cfg.payload),
         sh.n_local,                  # dense reduce-scatter transpose
     }
+    saw_pallas = [False]
 
     def visit(eqn, path):
         prim = eqn.primitive.name
         in_loop = "/while" in path
         src = _source_line(eqn)
+        if prim == "pallas_call":
+            saw_pallas[0] = True
 
         if prim in _HOST_PRIMS:
             out.append(Finding(
@@ -309,6 +315,19 @@ def lint_engine(
                 ))
 
     _walk(closed.jaxpr, visit)
+    if (
+        cfg.relax_impl.startswith("fused")
+        and sparse
+        and not saw_pallas[0]
+    ):
+        out.append(Finding(
+            "jaxpr", "fused-kernel-escape", "warn", subject,
+            "relax_impl requests the fused superstep kernel but no "
+            "pallas_call appears in the traced step — the engine "
+            "silently fell back to the reference relax (non-min-plus "
+            "processing or a level-bearing hierarchy); drop '/fused' "
+            "or switch to an sssp-shaped spec",
+        ))
     return out
 
 
@@ -323,7 +342,7 @@ def lint_grid(
     seen: dict = {}
     for cfg in configs:
         key = (cfg.hierarchy, cfg.exchange, cfg.frontier_cap,
-               cfg.relax_impl, cfg.collect_metrics)
+               cfg.relax_impl, cfg.collect_metrics, cfg.payload)
         if key in seen:
             continue
         subject = f"{cfg.hierarchy.name}/{cfg.exchange}"

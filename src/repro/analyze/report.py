@@ -99,6 +99,13 @@ def run_report(
         n_local=shape.n_local, rows=shape.rows, width=shape.width,
         n_parts=shape.n_parts,
     )
+    # fused-kernel and quantized-payload points ride along so the lint
+    # gate covers the '/fused' and '/q:*' spec surface too
+    specs = specs + [
+        "delta:5/sparse/fused",
+        "delta:5/sparse/q:bf16",
+        "delta:5/sparse/fused/q:u16",
+    ]
     configs = []
     for s in specs:
         cfg = SolverConfig.from_spec(s)
@@ -112,7 +119,8 @@ def run_report(
         from repro.api.problem import get_processing
 
         ecfg = cfg.engine_config(get_processing("sssp"))
-        key = (ecfg.hierarchy, ecfg.exchange)
+        key = (ecfg.hierarchy, ecfg.exchange, ecfg.relax_impl,
+               ecfg.payload)
         if key not in seen_engines:
             seen_engines.add(key)
             engine_cfgs.append(ecfg)

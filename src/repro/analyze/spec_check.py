@@ -23,7 +23,7 @@ from typing import Optional, Sequence, Union
 from repro.analyze.findings import Finding
 from repro.api.config import SolverConfig, as_config
 from repro.core.eagm import LEVEL_SCOPE, LOCAL_LEVELS
-from repro.core.frontier import frontier_caps
+from repro.core.frontier import frontier_caps, payload_plane_words
 from repro.core.ordering import DeltaStepping, TopK
 
 #: partitioners whose vertex->rank boundaries depend on the graph's
@@ -58,29 +58,64 @@ def check_config(
             "or drop the cap",
         ))
 
-    if cfg.relax_impl != "ref" and not sparse:
+    # kernel relax impls (pallas/fused) silently keep the 'ref' path in
+    # configurations the kernel doesn't cover; for the fused kernel
+    # that silent escape gets its own rule id so CI can gate on it
+    kern = cfg.relax_impl != "ref"
+    fused = cfg.relax_impl.startswith("fused")
+
+    if kern and not sparse:
         out.append(Finding(
-            "spec", "relax-impl-dense", "warn", subject,
+            "spec",
+            "fused-kernel-escape" if fused else "relax-impl-dense",
+            "warn", subject,
             f"relax_impl={cfg.relax_impl!r} only drives the sparse "
             f"push path; the dense {cfg.exchange!r} exchange never "
             "invokes it",
         ))
 
-    if cfg.relax_impl != "ref" and processing != "sssp":
+    if kern and processing != "sssp":
         out.append(Finding(
-            "spec", "relax-impl-processing", "warn", subject,
+            "spec",
+            "fused-kernel-escape" if fused else "relax-impl-processing",
+            "warn", subject,
             f"relax_impl={cfg.relax_impl!r} is wired for min-plus "
             f"sssp only; processing {processing!r} silently falls "
             "back to 'ref'",
         ))
 
-    if cfg.relax_impl != "ref" and hier.needs_level:
+    if kern and hier.needs_level:
         out.append(Finding(
-            "spec", "relax-impl-kla", "warn", subject,
+            "spec",
+            "fused-kernel-escape" if fused else "relax-impl-kla",
+            "warn", subject,
             f"relax_impl={cfg.relax_impl!r} does not carry the KLA "
             "level attribute; a level-bearing hierarchy "
             f"({hier.name}) silently falls back to 'ref'",
         ))
+
+    if cfg.payload != "exact" and not sparse:
+        out.append(Finding(
+            "spec", "payload-quantized-dense", "warn", subject,
+            f"payload={cfg.payload!r} only compresses the sparse "
+            f"exchange; the dense {cfg.exchange!r} exchange moves "
+            "exact f32 planes — /q buys nothing without /sparse or "
+            "/auto",
+        ))
+
+    if cfg.payload != "exact":
+        import jax.numpy as jnp
+
+        from repro.api.problem import get_processing
+
+        if get_processing(processing).reduce is not jnp.minimum:
+            out.append(Finding(
+                "spec", "payload-processing", "error", subject,
+                f"quantized payload {cfg.payload!r} requires a "
+                "min-reduce semiring (round-up errors must be "
+                f"inflationary); processing {processing!r} is not — "
+                "EngineConfig refuses this combination at build time",
+            ))
 
     if hier.at("pod") is not None and "pod" not in mesh_axes:
         out.append(Finding(
@@ -153,7 +188,6 @@ def check_config(
         W, Pn = int(shape["width"]), int(shape["n_parts"])
         use_level = hier.needs_level
         nplanes = 2 if use_level else 1
-        kplanes = 3 if use_level else 2
         if sparse:
             row_cap, slot_cap = frontier_caps(
                 R, W, nl, Pn, cfg.frontier_cap
@@ -166,11 +200,12 @@ def check_config(
                     f"{R} ELL rows per rank — clamped to {row_cap}; "
                     "the spec overstates its capacity",
                 ))
-            if kplanes * slot_cap >= nplanes * nl:
+            pwords = payload_plane_words(slot_cap, use_level, cfg.payload)
+            if pwords >= nplanes * nl:
                 out.append(Finding(
                     "spec", "sparse-cannot-pay", "info", subject,
                     f"at this shape the sparse payload "
-                    f"({kplanes}x{slot_cap} words) never beats the "
+                    f"({pwords} words/segment) never beats the "
                     f"dense reduce-scatter ({nplanes}x{nl} words) — "
                     "'auto' resolves dense at trace time; '/sparse' "
                     "pays the compaction for nothing",
@@ -203,7 +238,6 @@ def explain_config(
     hier = cfg.hierarchy
     use_level = hier.needs_level
     nplanes = 2 if use_level else 1
-    kplanes = 3 if use_level else 2
     lines = [f"spec {cfg.name!r} — per-superstep plan:"]
 
     lines.append("  ordering decisions (outermost first):")
@@ -241,15 +275,28 @@ def explain_config(
             row_cap, slot_cap = frontier_caps(
                 R, W, nl, Pn, cfg.frontier_cap
             )
-            sparse_words = (Pn - 1) * kplanes * slot_cap
+            pwords = payload_plane_words(slot_cap, use_level, cfg.payload)
+            sparse_words = (Pn - 1) * pwords
+            enc = "(idx,val)" if cfg.payload == "exact" else (
+                f"(u32 idx, {cfg.payload} Δ)"
+            )
             lines.append(
-                f"    {cfg.exchange:7s} (idx,val) all_to_all, "
+                f"    {cfg.exchange:7s} {enc} all_to_all, "
                 f"{sparse_words} words/device on sparse supersteps "
                 f"(row_cap={row_cap}, slot_cap={slot_cap}, "
-                f"{kplanes} planes); dense fallback moves "
+                f"{pwords} words/segment); dense fallback moves "
                 f"{dense_words} words"
             )
-            if kplanes * slot_cap >= nplanes * nl:
+            if cfg.payload != "exact":
+                exact_words = (Pn - 1) * payload_plane_words(
+                    slot_cap, use_level, "exact"
+                )
+                lines.append(
+                    f"            quantized payload: {sparse_words} vs "
+                    f"{exact_words} exact words — round-up-only codes, "
+                    "final state repaired exact by the facade"
+                )
+            if pwords >= nplanes * nl:
                 lines.append(
                     "            NOTE: sparse cannot pay at this "
                     "shape — resolves dense"

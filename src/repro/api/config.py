@@ -30,17 +30,23 @@ frontier-sparse execution modes (``/sparse``: O(frontier) compaction
 ``frontier_cap`` bounds the per-device compacted frontier (None =
 rows/8).
 
-Both grammars accept an ``/adapt[:policy]`` segment (in any order
-with the exchange segment) enabling the runtime controller
-(``repro.tune``): the engine runs in ``adapt_window``-superstep
-segments and the named policy retunes delta / frontier_cap / the
-sparse-dense choice between segments — bare ``/adapt`` means
-``/adapt:rho`` — and a trailing partition segment selecting the graph
-relabeling partitioner (``repro.graph.partition``)::
+Both grammars accept further ``/``-segments in any order beside the
+exchange: ``/fused`` selects the fused-superstep Pallas kernel
+(``relax_impl="fused"``; min-plus sparse path, kernels/
+superstep_fused), ``/q[:dtype]`` a quantized sparse-exchange payload
+(``dtype`` ∈ {bf16, u16}, bare ``/q`` = ``/q:bf16`` — round-up-only
+deltas, repaired to exact final states by the facade), and
+``/adapt[:policy]`` the runtime controller (``repro.tune``): the
+engine runs in ``adapt_window``-superstep segments and the named
+policy retunes delta / frontier_cap / the sparse-dense choice
+between segments — bare ``/adapt`` means ``/adapt:rho``.  A trailing
+partition segment selects the graph relabeling partitioner
+(``repro.graph.partition``)::
 
-    root[+variant][/exchange][/adapt[:policy]][@partitioner]
+    root[+variant][/exchange][/fused][/q[:dtype]][/adapt[:policy]][@partitioner]
     "delta:5+threadq/sparse@ebal"
     "delta:5/sparse/adapt:rho"
+    "delta:5/sparse/fused/q:bf16"
     "delta:5 > pod:dijkstra /sparse @shuffle:7"
 
 with partitioner ∈ {block, shuffle[:seed], ebal, degree} (``block``,
@@ -55,6 +61,7 @@ from typing import Optional, Union
 
 from repro.core.eagm import DEFAULT_CHUNK, Hierarchy, make_hierarchy
 from repro.core.engine import EXCHANGE_MODES, EngineConfig, RELAX_IMPLS
+from repro.core.frontier import PAYLOAD_MODES
 from repro.core.ordering import suggest
 from repro.core.processing import ProcessingFn
 from repro.graph.partition import canonical_partitioner
@@ -73,7 +80,13 @@ class SolverConfig:
     max_iters: int = 10**9
     collect_metrics: bool = True
     frontier_cap: Optional[int] = None  # sparse-path row capacity F
-    relax_impl: str = "ref"        # sparse relax backend ('ref'|'pallas')
+    # sparse relax backend: 'ref' | 'pallas'[_interpret] |
+    # 'fused'[_interpret] (spec segment '/fused')
+    relax_impl: str = "ref"
+    # sparse-exchange payload encoding: 'exact' | 'bf16' | 'u16'
+    # (spec segment '/q[:dtype]'); quantized modes round errors up
+    # only and the Solver's repair loop makes final states exact
+    payload: str = "exact"
     # the EAGM ordering hierarchy — the source of truth.  When given
     # (directly, as a spec string, or via ``from_spec`` grammar v2) it
     # wins and root/variant are re-derived for display.
@@ -132,6 +145,19 @@ class SolverConfig:
                 f"got {self.relax_impl!r}"
                 f"{suggest(str(self.relax_impl), RELAX_IMPLS)}"
             )
+        if self.payload not in PAYLOAD_MODES:
+            raise ValueError(
+                f"payload must be one of {PAYLOAD_MODES}, "
+                f"got {self.payload!r}"
+                f"{suggest(str(self.payload), PAYLOAD_MODES)}"
+            )
+        if self.payload != "exact" and self.adapt is not None:
+            raise ValueError(
+                "quantized payloads (/q:...) do not compose with the "
+                "adaptive controller (/adapt): the controller's "
+                "segmented engine has no repair loop, so final states "
+                "would stay inflated; pick one"
+            )
         # canonicalize (validates with a did-you-mean on unknown kinds)
         object.__setattr__(
             self, "partition", canonical_partitioner(self.partition)
@@ -171,13 +197,41 @@ class SolverConfig:
             if not head:
                 raise ValueError(f"empty ordering segment in spec {spec!r}")
             exchange_seen = adapt_seen = False
+            fused_seen = payload_seen = False
             for seg in segs:
                 if not seg:
                     raise ValueError(
                         f"empty exchange segment in spec {spec!r}"
                     )
                 kind = seg.split(":", 1)[0].strip()
-                if kind == "adapt":
+                if kind == "fused":
+                    if fused_seen:
+                        raise ValueError(
+                            f"duplicate fused segment in spec {spec!r}"
+                        )
+                    if ":" in seg:
+                        raise ValueError(
+                            f"fused segment takes no argument in spec "
+                            f"{spec!r}; use '/fused'"
+                        )
+                    fused_seen = True
+                    overrides.setdefault("relax_impl", "fused")
+                elif kind == "q":
+                    if payload_seen:
+                        raise ValueError(
+                            f"duplicate payload segment in spec {spec!r}"
+                        )
+                    payload_seen = True
+                    payload = seg.split(":", 1)[1].strip() if ":" in seg \
+                        else "bf16"
+                    if not payload:
+                        raise ValueError(
+                            f"empty payload dtype in spec {spec!r}; use "
+                            "'/q' (= '/q:bf16') or '/q:<dtype>' with "
+                            f"dtype in {PAYLOAD_MODES[1:]}"
+                        )
+                    overrides.setdefault("payload", payload)
+                elif kind == "adapt":
                     if adapt_seen:
                         raise ValueError(
                             f"duplicate adapt segment in spec {spec!r}"
@@ -202,9 +256,9 @@ class SolverConfig:
                 else:
                     raise ValueError(
                         f"unknown spec segment {seg!r} in {spec!r}: "
-                        f"expected an exchange mode {EXCHANGES} or "
-                        "'adapt[:policy]'"
-                        f"{suggest(kind, tuple(EXCHANGES) + ('adapt',))}"
+                        f"expected an exchange mode {EXCHANGES}, "
+                        "'fused', 'q[:dtype]' or 'adapt[:policy]'"
+                        f"{suggest(kind, tuple(EXCHANGES) + ('fused', 'q', 'adapt'))}"
                     )
             rest = head
         if ">" in rest or rest.lower().startswith("global:"):
@@ -230,6 +284,10 @@ class SolverConfig:
         preset (at the default chunk size), the ``>`` grammar
         otherwise; a non-default partitioner appends ``@<partition>``."""
         base = f"{self.hierarchy.name}/{self.exchange}"
+        if self.relax_impl == "fused":
+            base += "/fused"
+        if self.payload != "exact":
+            base += f"/q:{self.payload}"
         if self.adapt is not None:
             base += f"/adapt:{self.adapt}"
         if self.partition != "block":
@@ -264,6 +322,7 @@ class SolverConfig:
             collect_metrics=self.collect_metrics,
             frontier_cap=self.frontier_cap,
             relax_impl=self.relax_impl,
+            payload=self.payload,
             adapt_window=self.adapt_window if self.adapt is not None else 0,
         )
 

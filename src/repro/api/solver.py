@@ -44,7 +44,11 @@ from repro.core.engine import (
     initial_state_batch,
     make_engine,
 )
-from repro.core.frontier import frontier_caps, grow_frontier_cap
+from repro.core.frontier import (
+    frontier_caps,
+    grow_frontier_cap,
+    payload_plane_words,
+)
 from repro.core.metrics import WorkMetrics
 from repro.core.processing import ProcessingFn
 from repro.graph.formats import Graph, graph_fingerprint
@@ -143,6 +147,11 @@ def compiled_engine(
 # dense fallbacks are the capacity veto working as designed)
 OVERFLOW_WARN_STREAK = 3
 
+# hard cap on quantized-payload repair restarts (each restart strictly
+# lowers some committed value, so this is a safety net, not a tuning
+# knob — one or two sweeps repair everything in practice)
+QUANT_REPAIR_MAX_SWEEPS = 25
+
 
 def exchange_words(
     pg: PartitionedGraph, ecfg: EngineConfig, it: int, fallbacks: int
@@ -160,8 +169,11 @@ def exchange_words(
             P > 1 but obscured the per-rank intent; this form is
             explicit.
       pmin  2x a2a — a full-array ring all-reduce per combine.
-      sparse (P-1)·K·S words on sparse supersteps, dense a2a words on
-            the `fallbacks` dense ones.
+      sparse (P-1)·payload_plane_words(S) words on sparse supersteps
+            (exact: (idx, val) [+ level] planes; quantized: u32
+            indices + packed 16-bit delta codes + the per-segment
+            bound words — the dtype-parametrized accounting), dense
+            a2a words on the `fallbacks` dense ones.
 
     The adaptive driver calls this per segment with that segment's
     ``frontier_cap``, so byte totals stay exact across cap growth.
@@ -177,7 +189,9 @@ def exchange_words(
     _, slot_cap = frontier_caps(
         pg.rows_per_rank, pg.width, nl, P_, ecfg.frontier_cap
     )
-    sparse_words = (P_ - 1) * (nplanes + 1) * slot_cap
+    sparse_words = (P_ - 1) * payload_plane_words(
+        slot_cap, use_level, ecfg.payload
+    )
     return (it - fallbacks) * sparse_words + fallbacks * dense_words
 
 
@@ -406,6 +420,8 @@ class Solver:
         D0, T0, L0 = initial_state(pg, p, problem.source_items())
         if ecfg.adapt_window > 0:
             return self._solve_adaptive(problem, pg, ecfg, D0, T0, L0)
+        if ecfg.payload != "exact":
+            return self._solve_quantized(problem, pg, ecfg, D0, T0, L0)
         fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
         out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
         return self._pack(problem, pg, ecfg, *out)
@@ -434,6 +450,13 @@ class Solver:
                 "the controller would steer every lane with one "
                 "shared schedule; use a static spec for batches or "
                 "solve adaptive queries one at a time"
+            )
+        if self.config.payload != "exact":
+            raise ValueError(
+                "solve_batch does not support quantized payloads "
+                "(/q:...): the exact repair loop re-verifies and "
+                "restarts per query; use an exact payload for batches "
+                "or solve quantized queries one at a time"
             )
         g0 = problems[0].graph
         p = problems[0].processing_fn
@@ -541,6 +564,8 @@ class Solver:
 
         if ecfg.adapt_window > 0:
             sol = self._solve_adaptive(problem, pg, ecfg, D0, T0, L0)
+        elif ecfg.payload != "exact":
+            sol = self._solve_quantized(problem, pg, ecfg, D0, T0, L0)
         else:
             fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
             out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
@@ -572,6 +597,94 @@ class Solver:
         st["segments"] += report.segments
         st["retraces"] += report.retraces
         st["cap_growths"] += report.cap_growths
+        padded = np.asarray(D).reshape(pg.n_parts, pg.n_local)
+        return Solution(
+            state=pg.unpermute(padded.reshape(-1)),
+            metrics=m,
+            problem=problem,
+            config=self.config,
+            padded=padded,
+            pg=pg,
+        )
+
+    def _solve_quantized(
+        self, problem, pg, ecfg: EngineConfig, D0, T0, L0
+    ) -> Solution:
+        """Quantized-payload (``/q:...``) solve + exact repair loop.
+
+        The quantized exchange only ever *inflates* candidate values
+        (round-up codes; verify-failed codes decode to +inf), so the
+        state the engine converges to is pointwise >= the exact
+        fixpoint, with the initial workitems committed exactly.  One
+        host-side re-verification sweep (the same
+        ``_bootstrap_candidates`` that powers ``resolve``) then either
+        certifies the fixpoint — no edge improves any committed value,
+        which with exact initial commits pins the state to the least
+        fixpoint — or seeds an exact warm restart from the improving
+        candidates.  Every restart strictly lowers some committed
+        value (monotone commits), so the loop terminates; final states
+        are bit-identical to an exact-payload solve.
+        """
+        p = problem.processing_fn
+        fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
+        worst = np.float32(p.worst)
+        D, it, commits, relax, classes, active, fallbacks, streak = fn(
+            pg.row_src, pg.col, pg.wgt, D0, T0, L0
+        )
+        it_t, commits_t = int(it), int(commits)
+        relax_t, classes_t = int(relax), int(classes)
+        fallbacks_t, streak_max = int(fallbacks), int(streak)
+        sweeps = verifies = 0
+        while int(active) == 0:  # truncated runs skip repair (warned)
+            padded = np.asarray(D).reshape(pg.n_parts, pg.n_local)
+            T_full = _bootstrap_candidates(pg, p, padded)
+            verifies += 1
+            if not bool(np.asarray(p.better(T_full, padded.reshape(-1))).any()):
+                break  # certified: the exact least fixpoint
+            if sweeps >= QUANT_REPAIR_MAX_SWEEPS:
+                import warnings
+
+                warnings.warn(
+                    f"quantized repair loop hit "
+                    f"{QUANT_REPAIR_MAX_SWEEPS} restarts without "
+                    "certifying the exact fixpoint; the returned state "
+                    "may retain inflated values",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+                break
+            sweeps += 1
+            D0r = np.concatenate(
+                [padded, np.full((pg.n_parts, 1), worst, np.float32)],
+                axis=1,
+            )
+            T0r = np.concatenate(
+                [T_full.reshape(pg.n_parts, pg.n_local),
+                 np.full((pg.n_parts, 1), worst, np.float32)],
+                axis=1,
+            )
+            L0r = np.where(
+                np.asarray(p.better(T0r, D0r)),
+                np.float32(0.0), np.float32(np.inf),
+            ).astype(np.float32)
+            D, it, commits, relax, classes, active, fallbacks, streak = fn(
+                pg.row_src, pg.col, pg.wgt, D0r, T0r, L0r
+            )
+            it_t += int(it)
+            commits_t += int(commits)
+            relax_t += int(relax)
+            classes_t += int(classes)
+            fallbacks_t += int(fallbacks)
+            streak_max = max(streak_max, int(streak))
+        m = _finish_metrics(
+            pg, ecfg, it_t, commits_t, relax_t, classes_t, active,
+            fallbacks_t, streak_max,
+        )
+        # each host-side re-verification sweep is one superstep's worth
+        # of full-graph relaxation, moving no exchange bytes
+        m.relaxations += pg.m * verifies
+        m.supersteps += verifies
+        m.repair_sweeps = sweeps
         padded = np.asarray(D).reshape(pg.n_parts, pg.n_local)
         return Solution(
             state=pg.unpermute(padded.reshape(-1)),

@@ -65,8 +65,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.frontier import (
+    PAYLOAD_MODES,
     compact_rows,
     frontier_caps,
+    payload_plane_words,
     sparse_payload,
     unpack_combine,
 )
@@ -89,8 +91,25 @@ INF = jnp.float32(jnp.inf)
 EXCHANGE_MODES = ("a2a", "pmin", "sparse", "auto")
 
 
-#: valid relaxation backends for the sparse push path
-RELAX_IMPLS = ("ref", "pallas", "pallas_interpret")
+#: valid relaxation backends for the sparse push path:
+#:   'ref'    inline jnp gather/relax/scatter (XLA fuses it fine)
+#:   'pallas' / 'pallas_interpret'   kernels/relax_push — Pallas gather
+#:            + relax, XLA scatter
+#:   'fused'  / 'fused_interpret'    kernels/superstep_fused — gather +
+#:            relax + scatter-min in ONE kernel launch (no (F, W)
+#:            intermediates in HBM)
+#: Kernel impls apply to min-plus (sssp) processing without levels and
+#: silently keep 'ref' otherwise (the analyze 'fused-kernel-escape'
+#: lint surfaces that); '*_interpret' forces the Pallas interpreter,
+#: which is also auto-selected on backends without a Mosaic compiler.
+RELAX_IMPLS = ("ref", "pallas", "pallas_interpret", "fused",
+               "fused_interpret")
+
+
+def _interpret_kernels(relax_impl: str) -> bool:
+    """Pallas kernels run interpreted when explicitly requested or when
+    the backend has no Mosaic compiler (CPU)."""
+    return relax_impl.endswith("_interpret") or jax.default_backend() == "cpu"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,10 +126,18 @@ class EngineConfig:
     # the sparse path (None = rows/8); exchange slot capacity derives
     # from it (frontier.frontier_caps)
     frontier_cap: Optional[int] = None
-    # relaxation backend for the sparse push path: 'ref' (inline jnp,
-    # the default — XLA fuses it fine) | 'pallas' | 'pallas_interpret'
-    # (kernels/relax_push; min-plus processing only, others stay 'ref')
+    # relaxation backend for the sparse push path (see RELAX_IMPLS):
+    # 'ref' (inline jnp, the default) | 'pallas'[_interpret] |
+    # 'fused'[_interpret]; kernels apply to min-plus processing only,
+    # others stay 'ref'
     relax_impl: str = "ref"
+    # sparse-exchange payload encoding (frontier.PAYLOAD_MODES):
+    # 'exact' (f32 + i32, bit-identical to dense) | 'bf16' | 'u16'
+    # (u32 indices + 16-bit round-up quantized value deltas — errors
+    # are strictly inflationary, self-stabilization repairs them; the
+    # facade's repair loop makes final states exact).  Min-reduce
+    # semirings only; dense-fallback supersteps stay exact f32.
+    payload: str = "exact"
     # adaptive segment window: 0 builds the classic run-to-convergence
     # loop; W > 0 builds a *segment* engine that runs at most W
     # supersteps per jitted call, threads (active, last_key, streak)
@@ -139,6 +166,18 @@ class EngineConfig:
         if self.adapt_window < 0:
             raise ValueError(
                 f"adapt_window must be >= 0: {self.adapt_window}"
+            )
+        if self.payload not in PAYLOAD_MODES:
+            raise ValueError(
+                f"payload must be one of {PAYLOAD_MODES}, got "
+                f"{self.payload!r}{suggest(str(self.payload), PAYLOAD_MODES)}"
+            )
+        if self.payload != "exact" and self.processing.reduce is not jnp.minimum:
+            raise ValueError(
+                f"quantized payload {self.payload!r} requires a min-reduce "
+                f"semiring (round-up errors must be inflationary); "
+                f"processing fn {self.processing.name!r} reduces with "
+                f"{getattr(self.processing.reduce, '__name__', self.processing.reduce)}"
             )
 
     @property
@@ -312,18 +351,27 @@ def build_step(
             def relax_push(_):
                 """Push mode: gather only the F eligible virtual rows
                 (kernels/relax_push is the TPU realization of the
-                gather half); filled slots carry col == n_pad and
-                annihilate in the scatter."""
+                gather half, kernels/superstep_fused of the whole
+                gather+relax+scatter); filled slots carry col == n_pad
+                and annihilate in the scatter."""
+                kernel_ok = p.name == "sssp" and not use_level
+                if cfg.relax_impl.startswith("fused") and kernel_ok:
+                    from repro.kernels.superstep_fused import fused_superstep
+
+                    C = fused_superstep(
+                        D, f_idx, f_cnt, row_src, col, wgt, n_pad,
+                        interpret=_interpret_kernels(cfg.relax_impl),
+                    )[:n_pad]
+                    return C, jnp.zeros_like(C)
                 colg = jnp.take(
                     col, f_idx, axis=0, mode="fill", fill_value=n_pad
                 )
-                if cfg.relax_impl != "ref" and p.name == "sssp" \
-                        and not use_level:
+                if cfg.relax_impl.startswith("pallas") and kernel_ok:
                     from repro.kernels.relax_push import relax_push_gather
 
                     cand = relax_push_gather(
                         D, f_idx, f_cnt, row_src, col, wgt,
-                        interpret=(cfg.relax_impl == "pallas_interpret"),
+                        interpret=_interpret_kernels(cfg.relax_impl),
                     )
                     return scatter_reduce(colg, cand, n_pad)[:n_pad], \
                         jnp.zeros((n_pad,), jnp.float32)
@@ -401,17 +449,19 @@ def build_step(
             mine, mineL = exchange_pmin(None)
         elif cfg.exchange == "a2a":
             mine, mineL = exchange_a2a(None)
-        elif cfg.exchange == "auto" and kplanes * slot_cap >= nplanes * n_local:
+        elif cfg.exchange == "auto" and payload_plane_words(
+            slot_cap, use_level, cfg.payload
+        ) >= nplanes * n_local:
             # static shortcut: at these capacities the sparse payload
             # can never move fewer words than the dense reduce-scatter
-            # (K·S ≥ planes·n_local), so 'auto' resolves to dense at
-            # trace time — no compaction, no decision collective
+            # (payload words ≥ planes·n_local), so 'auto' resolves to
+            # dense at trace time — no compaction, no decision collective
             mine, mineL = exchange_a2a(None)
             fallbacks = fallbacks + 1
         else:  # 'sparse' | 'auto'
             extra = [(CL, INF)] if use_level else []
             payload, ex_overflow = sparse_payload(
-                C, extra, n_parts, slot_cap, worst
+                C, extra, n_parts, slot_cap, worst, payload=cfg.payload
             )
             cap_ok = jnp.logical_not(ex_overflow)
             ok = cap_ok
@@ -446,7 +496,8 @@ def build_step(
                     tiled=True,
                 )
                 mine, mineL = unpack_combine(
-                    recv, n_local, slot_cap, is_min, worst, use_level
+                    recv, n_local, slot_cap, is_min, worst, use_level,
+                    payload=cfg.payload,
                 )
                 if mineL is None:
                     mineL = jnp.zeros_like(mine)

@@ -15,8 +15,10 @@ constraint that every shape is static:
   buffers,
 * :func:`sparse_payload` / :func:`unpack_combine` — the (P, K·S)
   payload moved by one ``all_to_all`` (values, bitcast int32 indices
-  and, for KLA, levels as f32 planes) and the owner-side
-  scatter-combine back into a dense per-vertex array.
+  and, for KLA, levels as f32 planes — or u32 indices + packed 16-bit
+  round-up value-delta codes in the quantized :data:`PAYLOAD_MODES`)
+  and the owner-side scatter-combine back into a dense per-vertex
+  array.
 
 Everything here is collective-free local compute; the engine supplies
 the ``all_to_all`` and the global (uniform-across-ranks) fallback
@@ -31,6 +33,96 @@ import jax
 import jax.numpy as jnp
 
 INF = jnp.float32(jnp.inf)
+
+#: Sparse-exchange payload encodings.  "exact" moves f32 values +
+#: bitcast-i32 indices (bit-identical to the dense path).  "bf16" /
+#: "u16" move u32 indices + 16-bit quantized value *deltas* against
+#: each segment's lower bound — round-up-only, so every decoded
+#: candidate is >= the exact candidate (inflationary) and the
+#: self-stabilizing kernel repairs the error (min-reduce semirings
+#: only; the engine enforces this).
+PAYLOAD_MODES = ("exact", "bf16", "u16")
+
+
+def payload_plane_words(
+    slot_cap: int, use_level: bool, payload: str = "exact"
+) -> int:
+    """Axis-1 width, in 32-bit words, of one destination segment of the
+    sparse all_to_all payload.
+
+    exact:     [f32 values | bitcast-i32 indices | (f32 levels)]
+    quantized: [u32 indices | packed u16-pair deltas | lo
+                | (scale, u16 only) | (bitcast-f32 levels)]
+    """
+    S = slot_cap
+    if payload == "exact":
+        return (3 if use_level else 2) * S
+    if payload not in PAYLOAD_MODES:
+        raise ValueError(f"unknown payload mode {payload!r}")
+    head = 1 if payload == "bf16" else 2  # lo (+ scale)
+    return S + (S + 1) // 2 + head + (S if use_level else 0)
+
+
+def _quantize_bf16(val_buf: jax.Array, lo_fin: jax.Array) -> jax.Array:
+    """Round-up bf16 codes for ``val_buf - lo_fin`` (both >= 0 planes).
+
+    The code is the high half of the delta's f32 bits, bumped by one
+    when any low bit is set (carry into the exponent is exactly IEEE
+    round-toward-+inf, and +inf's code 0x7F80 is a fixed point).  The
+    sender then *verifies* its own code with the receiver's decode
+    expression; any code that would reconstruct below the exact value
+    (the f32 subtraction itself can round down) is replaced by the
+    +inf code — a dropped candidate is inflationary-to-+inf and gets
+    repaired, never a deflation.
+    """
+    delta = val_buf - lo_fin[:, None]
+    bits = jax.lax.bitcast_convert_type(delta, jnp.uint32)
+    carry = (bits & jnp.uint32(0xFFFF)) != jnp.uint32(0)
+    q = (bits >> jnp.uint32(16)) + carry.astype(jnp.uint32)
+    recon = lo_fin[:, None] + jax.lax.bitcast_convert_type(
+        q << jnp.uint32(16), jnp.float32
+    )
+    return jnp.where(recon < val_buf, jnp.uint32(0x7F80), q)
+
+
+def _quantize_u16(
+    val_buf: jax.Array, lo_fin: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Round-up linear u16 codes + per-segment scale (65535 = +inf).
+
+    ``q = 0`` is pinned to slots whose value *equals* the segment
+    lower bound (they decode to ``lo_fin`` bit-exactly, so the
+    segment minimum always survives quantization); everything else is
+    ceil-scaled with a +1 guard and then sender-verified against the
+    receiver's decode expression exactly as in bf16 mode.
+    """
+    fin = jnp.isfinite(val_buf)
+    delta = val_buf - lo_fin[:, None]
+    dmax = jnp.max(jnp.where(fin, delta, jnp.float32(0.0)), axis=1)
+    scale = jnp.maximum(dmax / jnp.float32(65534.0), jnp.float32(1e-30))
+    qf = jnp.ceil(delta / scale[:, None]) + jnp.float32(1.0)
+    q = jnp.clip(qf, 0.0, 65534.0).astype(jnp.uint32)
+    exact0 = val_buf == lo_fin[:, None]
+    q = jnp.where(exact0, jnp.uint32(0), q)
+    recon = lo_fin[:, None] + q.astype(jnp.float32) * scale[:, None]
+    good = exact0 | (fin & (recon >= val_buf))
+    return jnp.where(good, q, jnp.uint32(65535)), scale
+
+
+def _pack_u16_pairs(q: jax.Array, slot_cap: int) -> jax.Array:
+    """Pack (P, S) u16 codes into (P, ceil(S/2)) u32 words, low code
+    in the low half."""
+    H = (slot_cap + 1) // 2
+    qp = jnp.pad(q, ((0, 0), (0, 2 * H - slot_cap)))
+    return qp[:, 0::2] | (qp[:, 1::2] << jnp.uint32(16))
+
+
+def _unpack_u16_pairs(pairs: jax.Array, slot_cap: int) -> jax.Array:
+    """Inverse of :func:`_pack_u16_pairs`: (P, ceil(S/2)) -> (P, S)."""
+    Pn, H = pairs.shape
+    lo = pairs & jnp.uint32(0xFFFF)
+    hi = pairs >> jnp.uint32(16)
+    return jnp.stack([lo, hi], axis=-1).reshape(Pn, 2 * H)[:, :slot_cap]
 
 
 def frontier_caps(
@@ -122,13 +214,24 @@ def sparse_payload(
     n_parts: int,
     slot_cap: int,
     worst,
+    payload: str = "exact",
 ):
-    """Build the (P, K·S) all_to_all payload from the (n_pad,) local
-    candidate buffer ``C``.
+    """Build the per-destination all_to_all payload from the (n_pad,)
+    local candidate buffer ``C``.
 
-    Plane layout along axis 1: [values | bitcast int32 local indices |
-    extra planes...] — ``extra_planes`` is a list of ``(array, fill)``
-    pairs of (n_pad,) f32 attributes riding along (the KLA level).
+    ``payload="exact"`` (default): f32, axis-1 layout [values | bitcast
+    int32 local indices | extra planes...] — ``extra_planes`` is a list
+    of ``(array, fill)`` pairs of (n_pad,) f32 attributes riding along
+    (the KLA level).  Bit-identical to the dense exchange.
+
+    ``payload="bf16"`` / ``"u16"``: u32, axis-1 layout [indices |
+    packed 16-bit value-delta codes | segment lower bound (+ scale for
+    u16) | bitcast extra planes...].  Indices stay full-width (the
+    payload-overflow lint's invariant: quantize values, never indices);
+    values are round-up-only deltas, so decoded candidates are >= the
+    exact ones and self-stabilization repairs them.  Requires a
+    min-reduce semiring with ``worst == +inf`` (the engine enforces).
+
     Returns ``(payload, overflow)``; empty slots carry ``worst`` values
     and the index sentinel n_local (the owner's discarded dummy slot).
     """
@@ -140,17 +243,41 @@ def sparse_payload(
         jnp.arange(n_local, dtype=jnp.int32)[None, :], C2.shape
     )
     idx_buf = scatter_plane(lidx, slot, slot_cap, jnp.int32(n_local))
-    planes = [
-        scatter_plane(C2, slot, slot_cap, jnp.float32(worst)),
-        jax.lax.bitcast_convert_type(idx_buf, jnp.float32),
+    val_buf = scatter_plane(C2, slot, slot_cap, jnp.float32(worst))
+    if payload == "exact":
+        planes = [
+            val_buf,
+            jax.lax.bitcast_convert_type(idx_buf, jnp.float32),
+        ]
+        for arr, fill in extra_planes:
+            planes.append(
+                scatter_plane(
+                    arr.reshape(Pn, n_local), slot, slot_cap,
+                    jnp.float32(fill),
+                )
+            )
+        return jnp.concatenate(planes, axis=1), overflow
+    if payload not in PAYLOAD_MODES:
+        raise ValueError(f"unknown payload mode {payload!r}")
+    lo = jnp.min(val_buf, axis=1)  # per-destination-segment lower bound
+    lo_fin = jnp.where(jnp.isfinite(lo), lo, jnp.float32(0.0))
+    if payload == "bf16":
+        q = _quantize_bf16(val_buf, lo_fin)
+        head = [lo]
+    else:
+        q, scale = _quantize_u16(val_buf, lo_fin)
+        head = [lo, scale]
+    words = [
+        idx_buf.astype(jnp.uint32),
+        _pack_u16_pairs(q, slot_cap),
+        jax.lax.bitcast_convert_type(jnp.stack(head, axis=1), jnp.uint32),
     ]
     for arr, fill in extra_planes:
-        planes.append(
-            scatter_plane(
-                arr.reshape(Pn, n_local), slot, slot_cap, jnp.float32(fill)
-            )
+        lvl_buf = scatter_plane(
+            arr.reshape(Pn, n_local), slot, slot_cap, jnp.float32(fill)
         )
-    return jnp.concatenate(planes, axis=1), overflow
+        words.append(jax.lax.bitcast_convert_type(lvl_buf, jnp.uint32))
+    return jnp.concatenate(words, axis=1), overflow
 
 
 def unpack_combine(
@@ -160,6 +287,7 @@ def unpack_combine(
     is_min: bool,
     worst,
     has_level: bool,
+    payload: str = "exact",
 ):
     """Owner-side combine of a received (P, K·S) payload.
 
@@ -167,17 +295,50 @@ def unpack_combine(
     owned vertex and, when ``has_level``, the minimum level among
     candidates matching the winning value (the dense path's
     deterministic tie-break); ``mineL`` is None otherwise.
+
+    For quantized payloads the codes are decoded with the *same*
+    expression the sender verified against, so every decoded value is
+    exactly the sender's reconstruction: >= the exact candidate, equal
+    at each segment's lower bound.
     """
     S = slot_cap
-    val = recv[:, :S]
-    idx = jax.lax.bitcast_convert_type(recv[:, S : 2 * S], jnp.int32)
+    if payload == "exact":
+        val = recv[:, :S]
+        idx = jax.lax.bitcast_convert_type(recv[:, S : 2 * S], jnp.int32)
+        lvl_base = 2 * S
+    else:
+        if payload not in PAYLOAD_MODES:
+            raise ValueError(f"unknown payload mode {payload!r}")
+        H = (S + 1) // 2
+        idx = recv[:, :S].astype(jnp.int32)
+        q = _unpack_u16_pairs(recv[:, S : S + H], S)
+        lo = jax.lax.bitcast_convert_type(recv[:, S + H], jnp.float32)
+        lo_fin = jnp.where(jnp.isfinite(lo), lo, jnp.float32(0.0))
+        if payload == "bf16":
+            # the +inf code 0x7F80 decodes to lo_fin + inf = +inf
+            val = lo_fin[:, None] + jax.lax.bitcast_convert_type(
+                q << jnp.uint32(16), jnp.float32
+            )
+            lvl_base = S + H + 1
+        else:
+            scale = jax.lax.bitcast_convert_type(
+                recv[:, S + H + 1], jnp.float32
+            )
+            val = jnp.where(
+                q == jnp.uint32(65535),
+                INF,
+                lo_fin[:, None] + q.astype(jnp.float32) * scale[:, None],
+            )
+            lvl_base = S + H + 2
     buf = jnp.full((n_local + 1,), worst, jnp.float32)
     flat_i, flat_v = idx.reshape(-1), val.reshape(-1)
     buf = buf.at[flat_i].min(flat_v) if is_min else buf.at[flat_i].max(flat_v)
     mine = buf[:n_local]
     if not has_level:
         return mine, None
-    lvl = recv[:, 2 * S : 3 * S]
+    lvl = recv[:, lvl_base : lvl_base + S]
+    if payload != "exact":
+        lvl = jax.lax.bitcast_convert_type(lvl, jnp.float32)
     win = val == buf[idx]  # sentinel slots: worst == worst, lvl fill = inf
     lbuf = jnp.full((n_local + 1,), INF, jnp.float32)
     lbuf = lbuf.at[flat_i].min(jnp.where(win, lvl, INF).reshape(-1))

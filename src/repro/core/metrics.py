@@ -37,6 +37,10 @@ class WorkMetrics:
     #   adaptive decisions (new frontier_cap) during this solve; 0 for
     #   static solves and for adaptive solves that only touched
     #   dynamic scalars (delta, exchange force)
+    repair_sweeps: int = 0  # exact warm restarts the quantized-payload
+    #   repair loop needed to certify the exact fixpoint (0 for exact
+    #   payloads; host re-verification sweeps are folded into
+    #   relaxations/supersteps)
 
     def waste_ratio(self) -> float:
         """Relaxations per useful commit — the paper's redundant-work axis."""

@@ -1,0 +1,4 @@
+from repro.kernels.superstep_fused.kernel import fused_superstep
+from repro.kernels.superstep_fused.ref import fused_superstep_ref
+
+__all__ = ["fused_superstep", "fused_superstep_ref"]

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: fused sparse superstep relaxation (gather +
+min-plus relax + scatter-min in ONE kernel launch).
+
+The unfused sparse path (kernels/relax_push + XLA scatter) pays HBM
+round-trips between its stages: the compaction's gathers materialize
+(F, W) ``colg``/``srcg``/``wgtg`` buffers, the relax writes an (F, W)
+candidate buffer, and a separate XLA scatter reads it all back to
+build the (n_pad,) candidate array.  This kernel consumes the
+compacted frontier (the eligibility fold + compaction output
+``row_idx``/``count``) directly through the scalar-prefetch index
+maps and produces the final candidate buffer in one launch:
+
+    out[col[idx[f], w]] = min(out[...], dist[row_src[idx[f]]]
+                                        + wgt[idx[f], w])
+
+TPU mapping (DESIGN.md hardware-adaptation): ``row_idx`` and the live
+count are scalar-prefetched (PrefetchScalarGridSpec, extending the
+kernels/relax_push idiom) so the DMA engine streams exactly the
+(1, W) col/wgt strips the frontier names; the distance vector and the
+(n_pad+1,) output block stay VMEM-resident across grid steps (the
+output BlockSpec index map is constant, so the block is *revisited*,
+the standard Pallas accumulation pattern).  The scatter-min itself is
+a sequential ``fori_loop`` over the W lane values — Mosaic has no
+vector scatter primitive (see relax_push/ops.py), and W is the ELL
+width (small by construction), so the serialization is bounded.
+
+Exactness: min is associative and commutative in f32 (no NaNs here —
+candidates are sums of non-negative finite values and +inf), so any
+accumulation order produces bit-identical results to XLA's
+``buf.at[col].min(cand)``; the engine's fused path is bit-identical
+to the reference path by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_kernel(idx_ref, cnt_ref, dist_ref, src_ref, col_ref, wgt_ref,
+                  out_ref):
+    """One grid step: scatter-min virtual row idx[f] into the resident
+    (n_out+1,) candidate block."""
+    f = pl.program_id(0)
+
+    @pl.when(f == 0)
+    def _init():
+        out_ref[...] = jnp.full(out_ref.shape, jnp.inf, jnp.float32)
+
+    d = dist_ref[...]                      # (n_local+1,) resident
+    s = d[src_ref[0]]                      # scalar source state
+    live = f < cnt_ref[0]
+    # slots past the live count carry +inf and annihilate in the min
+    cand = jnp.where(live, s + wgt_ref[0, :], jnp.inf)   # (W,)
+    cols = col_ref[0, :]                                 # (W,)
+
+    def body(w, acc):
+        c = cols[w]
+        out_ref[c] = jnp.minimum(out_ref[c], cand[w])
+        return acc
+
+    jax.lax.fori_loop(
+        jnp.int32(0), jnp.int32(cand.shape[0]), body, jnp.int32(0)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "interpret"))
+def fused_superstep(
+    dist: jax.Array,     # (n_local+1,) f32; slot n_local = +inf dummy
+    row_idx: jax.Array,  # (F,) int32 row ids (entries past `count` ignored)
+    count,               # scalar int32: live prefix length of row_idx
+    row_src: jax.Array,  # (R,) int32 local source per virtual row
+    col: jax.Array,      # (R, W) int32 global destination ids (pad: n_out)
+    wgt: jax.Array,      # (R, W) f32 weights (+inf padding)
+    n_out: int,          # scatter buffer size (n_pad)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns the (n_out+1,) f32 candidate buffer (slot ``n_out``
+    swallows ELL padding columns; callers slice ``[:n_out]``).
+
+    Out-of-range entries of ``row_idx`` (the compaction fill sentinel
+    R) are clipped to a real block so the DMA index maps stay in
+    range; their candidates are masked to +inf by the live count, so
+    they contribute nothing — same invariant as relax_push_gather.
+    """
+    F = row_idx.shape[0]
+    R, W = wgt.shape
+    idx = jnp.clip(row_idx, 0, R - 1)  # fill sentinel R -> in-range block
+    cnt = jnp.reshape(jnp.minimum(jnp.int32(count), jnp.int32(F)), (1,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # row_idx, cnt
+        grid=(F,),
+        in_specs=[
+            pl.BlockSpec(dist.shape, lambda f, idx, cnt: (0,)),  # resident
+            pl.BlockSpec((1,), lambda f, idx, cnt: (idx[f],)),   # row_src
+            pl.BlockSpec((1, W), lambda f, idx, cnt: (idx[f], 0)),  # col
+            pl.BlockSpec((1, W), lambda f, idx, cnt: (idx[f], 0)),  # wgt
+        ],
+        # constant index map: the output block is revisited every grid
+        # step (accumulation pattern) and written back once at the end
+        out_specs=pl.BlockSpec((n_out + 1,), lambda f, idx, cnt: (0,)),
+    )
+    return pl.pallas_call(
+        _fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out + 1,), jnp.float32),
+        interpret=interpret,
+    )(idx, cnt, dist, row_src, col, wgt)

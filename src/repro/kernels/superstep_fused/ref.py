@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused sparse-superstep relaxation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_superstep_ref(
+    dist: jax.Array,     # (n_local+1,) f32 source states; slot n_local = +inf
+    row_idx: jax.Array,  # (F,) int32 virtual-row ids; fill sentinel >= R
+    row_src: jax.Array,  # (R,) int32 local source per virtual row
+    col: jax.Array,      # (R, W) int32 global destination ids (pad: n_out)
+    wgt: jax.Array,      # (R, W) f32 weights (+inf padding)
+    n_out: int,          # scatter buffer size (n_pad)
+) -> jax.Array:
+    """Min-plus relax of exactly the virtual rows in ``row_idx``,
+    scatter-min'd into an (n_out+1,) candidate buffer — the same
+    gather/relax/scatter the kernel fuses, staged through XLA ops.
+
+    Out-of-range entries of ``row_idx`` (the compaction fill) gather
+    the dummy source (state +inf) and the padding column n_out, so
+    they annihilate in the scatter like padded ELL slots do.
+    """
+    n_loc = dist.shape[0] - 1
+    srcg = jnp.take(row_src, row_idx, mode="fill", fill_value=n_loc)
+    colg = jnp.take(col, row_idx, axis=0, mode="fill", fill_value=n_out)
+    wgtg = jnp.take(wgt, row_idx, axis=0, mode="fill", fill_value=jnp.inf)
+    cand = jnp.take(dist, srcg)[:, None] + wgtg
+    buf = jnp.full((n_out + 1,), jnp.inf, dtype=jnp.float32)
+    return buf.at[colg.reshape(-1)].min(cand.reshape(-1))

@@ -1,10 +1,24 @@
-from repro.roofline.hlo import collective_bytes, flops_and_bytes, hbm_traffic
+from repro.roofline.hlo import (
+    collective_bytes,
+    flops_and_bytes,
+    hbm_traffic,
+    while_body_computations,
+)
 from repro.roofline.model import (
     Roofline, from_record, PEAK_FLOPS, HBM_BW, LINK_BW,
+)
+from repro.roofline.superstep import (
+    engine_step_hlo,
+    fused_kernel_bytes,
+    relax_region_bytes,
+    superstep_profile,
 )
 
 __all__ = [
     "collective_bytes", "flops_and_bytes", "hbm_traffic",
+    "while_body_computations",
     "Roofline", "from_record",
     "PEAK_FLOPS", "HBM_BW", "LINK_BW",
+    "engine_step_hlo", "fused_kernel_bytes", "relax_region_bytes",
+    "superstep_profile",
 ]

@@ -50,18 +50,31 @@ def _shape_bytes(shape_expr: str) -> int:
     return total
 
 
-def collective_bytes(hlo_text: str) -> dict:
+def collective_bytes(hlo_text: str, within=None) -> dict:
     """Returns per-device collective operand traffic:
-    {'bytes': {op: B}, 'counts': {op: n}, 'total_bytes': B}."""
+    {'bytes': {op: B}, 'counts': {op: n}, 'total_bytes': B}.
+
+    ``within`` (optional set of computation names) restricts which
+    computations' collectives are charged — e.g. the transitive while
+    body from :func:`while_body_computations` to get per-superstep
+    rather than per-solve traffic.  Operand sizes still resolve
+    module-wide."""
     sizes: dict[str, int] = {}
     pending: list[tuple[str, str, str]] = []  # (opcode, args, name)
 
+    cur_comp = None
     for line in hlo_text.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            cur_comp = cm.group(1)
+            continue
         m = _DEF_RE.match(line)
         if not m:
             continue
         name, shape_expr, opcode, rest = m.groups()
         sizes[name] = _shape_bytes(shape_expr)
+        if within is not None and cur_comp not in within:
+            continue
         base = opcode.replace("-start", "")
         if base in COLLECTIVE_OPS and not opcode.endswith("-done"):
             # operand list = text up to the matching close paren
@@ -119,30 +132,107 @@ _FREE_OPS = {
     "after-all", "partition-id", "replica-id", "iota",
 }
 
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->")
-_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+# computation header: `%name (params...) -> result {`.  Params may be
+# tuple-typed (nested parens), so match greedily up to the `)` that
+# precedes the arrow rather than the first close-paren.
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+
+#: attributes whose value names a called computation; branch lists
+#: appear as `branch_computations={%a, %b}`
+_CALL_KEY_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|"
+    r"false_computation|branch_computations)="
+    r"(\{[^}]*\}|%?[\w\.\-]+)"
+)
 
 
-def hbm_traffic(hlo_text: str) -> dict:
-    """Estimate executed HBM bytes: sum over non-free instructions in
-    non-fused computations of (output + operand) bytes.  While bodies
-    count once (callers scale by trip count externally)."""
-    # pass 1: find computations referenced by fusion ops (+ reducers)
-    fused: set = set()
-    reducers: set = set()
-    lines = hlo_text.splitlines()
-    for ln in lines:
+def _called_comps(rest: str) -> list:
+    """Computation names an instruction's attribute text calls into —
+    covers calls/to_apply/body/condition and conditional branches
+    (both the true/false pair and the `{...}` indexed-branch list)."""
+    names: list = []
+    for m in _CALL_KEY_RE.finditer(rest):
+        v = m.group(1)
+        if v.startswith("{"):
+            names += re.findall(r"%?([\w\.\-]+)", v)
+        else:
+            names.append(v.lstrip("%"))
+    return names
+
+
+def while_body_computations(hlo_text: str) -> set:
+    """Names of every computation reachable from a ``while`` op's body
+    — the per-superstep program, transitively through calls, fusions,
+    reducers and conditional branches.  Use as ``within=`` for
+    :func:`hbm_traffic` / :func:`collective_bytes` to isolate hot-loop
+    traffic from one-time setup."""
+    edges: dict = defaultdict(set)
+    roots: set = set()
+    cur_comp = None
+    for ln in hlo_text.splitlines():
+        cm = _COMP_RE.match(ln)
+        if cm:
+            cur_comp = cm.group(1)
+            continue
         m = _DEF_RE.match(ln)
         if not m:
             continue
         _, _, opcode, rest = m.groups()
-        for cm in _CALLS_RE.finditer(rest):
-            if opcode == "fusion":
-                fused.add(cm.group(1))
-            elif opcode in ("reduce", "all-reduce", "reduce-scatter",
-                            "scatter", "reduce-window", "sort",
-                            "all-reduce-start"):
-                reducers.add(cm.group(1))
+        called = _called_comps(rest)
+        if cur_comp is not None:
+            edges[cur_comp].update(called)
+        if opcode == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", rest)
+            if bm:
+                roots.add(bm.group(1))
+    out: set = set()
+    stack = list(roots)
+    while stack:
+        c = stack.pop()
+        if c in out:
+            continue
+        out.add(c)
+        stack.extend(edges.get(c, ()))
+    return out
+
+
+def hbm_traffic(hlo_text: str, within=None, top: int = 8) -> dict:
+    """Estimate executed HBM bytes: sum over non-free instructions in
+    non-fused computations of (output + operand) bytes.  While bodies
+    count once (callers scale by trip count externally).
+
+    Fusion ops are charged at their boundary (operands + output — the
+    internals stay in registers/VMEM) and labeled
+    ``fusion(<root-opcode>)`` after the fused computation's ROOT, so
+    a profile can say *which* fusion dominates.  ``within`` (a set of
+    computation names, e.g. from :func:`while_body_computations`)
+    restricts the charge to those computations; ``top`` caps the
+    per-op breakdown length."""
+    # pass 1: computations referenced by fusion ops (+ reducers), and
+    # each computation's ROOT opcode (for fusion labels)
+    fused: set = set()
+    reducers: set = set()
+    comp_root: dict = {}
+    lines = hlo_text.splitlines()
+    cur_comp = None
+    for ln in lines:
+        cm = _COMP_RE.match(ln)
+        if cm:
+            cur_comp = cm.group(1)
+            continue
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        _, _, opcode, rest = m.groups()
+        if ln.lstrip().startswith("ROOT") and cur_comp is not None:
+            comp_root[cur_comp] = opcode
+        called = _called_comps(rest)
+        if opcode == "fusion":
+            fused.update(called)
+        elif opcode in ("reduce", "all-reduce", "reduce-scatter",
+                        "scatter", "reduce-window", "sort",
+                        "all-reduce-start"):
+            reducers.update(called)
 
     sizes: dict[str, int] = {}
     cur_comp = None
@@ -163,6 +253,8 @@ def hbm_traffic(hlo_text: str) -> dict:
         sizes[name] = out_b
         if skip or opcode in _FREE_OPS:
             continue
+        if within is not None and cur_comp not in within:
+            continue
         depth, end = 1, len(rest)
         for i, ch in enumerate(rest):
             if ch == "(":
@@ -176,7 +268,12 @@ def hbm_traffic(hlo_text: str) -> dict:
             sizes.get(om.group(1), 0)
             for om in _OPERAND_RE.finditer(rest[:end])
         )
+        label = opcode
+        if opcode == "fusion":
+            called = _called_comps(rest)
+            root = comp_root.get(called[0]) if called else None
+            label = f"fusion({root})" if root else "fusion"
         total += out_b + operand_b
-        per_op[opcode] += out_b + operand_b
-    top = dict(sorted(per_op.items(), key=lambda kv: -kv[1])[:8])
-    return {"total_bytes": int(total), "by_op": top}
+        per_op[label] += out_b + operand_b
+    topd = dict(sorted(per_op.items(), key=lambda kv: -kv[1])[:top])
+    return {"total_bytes": int(total), "by_op": topd}

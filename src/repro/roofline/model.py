@@ -49,7 +49,7 @@ class Roofline:
             "memory": self.t_memory,
             "collective": self.t_collective,
         }
-        return max(terms, key=terms.get)
+        return max(terms, key=lambda k: terms[k])
 
     @property
     def t_bound(self) -> float:

@@ -1,0 +1,182 @@
+"""Op-wise per-superstep roofline profile of the compiled engine.
+
+The roofline model (:mod:`repro.roofline.model`) works per *solve*;
+perf work on the superstep kernel needs the per-*superstep* view:
+which ops inside the while body move the HBM bytes, and what the
+fused gather+relax+scatter kernel saves.  This module compiles the
+engine program, isolates the hot loop with
+:func:`repro.roofline.hlo.while_body_computations`, and charges HBM
+traffic op-by-op (fusions labeled by their ROOT opcode).
+
+Fused-kernel accounting: Pallas kernels compile to opaque
+custom-calls whose internals the HLO walk cannot see (and on the CPU
+backend they run interpreted, which is not the program the roofline
+targets).  So a fused config is profiled as
+
+    ref while-body traffic
+      - measured standalone relax-region traffic (gather/relax/scatter
+        microprogram at the same shapes)
+      + closed-form fused-kernel traffic (each tile crosses HBM once)
+
+which is exactly the fusion's value proposition: the (F, W) candidate
+matrix and its scatter intermediates never round-trip through HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, make_engine
+from repro.core.frontier import frontier_caps, payload_plane_words
+from repro.roofline.hlo import (
+    collective_bytes,
+    hbm_traffic,
+    while_body_computations,
+)
+
+#: default abstract partition shape, mirrors analyze's StepShape
+#: (roofline cannot import it — analyze imports roofline)
+DEFAULT_SHAPE = {"n_local": 64, "rows": 80, "width": 8}
+
+
+def engine_step_hlo(
+    ecfg: EngineConfig,
+    shape: Optional[dict] = None,
+    mesh=None,
+) -> tuple[str, int]:
+    """Compiled per-device HLO text of the solve program for ``ecfg``
+    at ``shape`` ({'n_local', 'rows', 'width'}).  Returns
+    (hlo_text, n_parts)."""
+    sh = dict(DEFAULT_SHAPE, **(shape or {}))
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    n_parts = int(np.prod(tuple(mesh.devices.shape)))
+    if ecfg.adapt_window:
+        ecfg = dataclasses.replace(ecfg, adapt_window=0)
+    fn = make_engine(
+        {"n_parts": n_parts, "n_local": sh["n_local"]}, mesh, ecfg
+    )
+    s = jax.ShapeDtypeStruct
+    args = (
+        s((n_parts, sh["rows"]), jnp.int32),
+        s((n_parts, sh["rows"], sh["width"]), jnp.int32),
+        s((n_parts, sh["rows"], sh["width"]), jnp.float32),
+        s((n_parts, sh["n_local"] + 1), jnp.float32),
+        s((n_parts, sh["n_local"] + 1), jnp.float32),
+        s((n_parts, sh["n_local"] + 1), jnp.float32),
+    )
+    return fn.lower(*args).compile().as_text(), n_parts
+
+
+def _relax_region(D, f_idx, row_src, col, wgt, n_pad: int):
+    """The unfused push-mode relax region at engine shapes: gather the
+    F eligible rows, form min-plus candidates, scatter-min into a
+    padded buffer — the ops the fused kernel replaces."""
+    n_local = D.shape[0] - 1
+    colg = jnp.take(col, f_idx, axis=0, mode="fill", fill_value=n_pad)
+    srcg = jnp.take(row_src, f_idx, mode="fill", fill_value=n_local)
+    wgtg = jnp.take(wgt, f_idx, axis=0, mode="fill", fill_value=jnp.inf)
+    cand = D[srcg][:, None] + wgtg
+    buf = jnp.full((n_pad + 1,), jnp.inf, jnp.float32)
+    return buf.at[colg.reshape(-1)].min(cand.reshape(-1))[:n_pad]
+
+
+def relax_region_bytes(
+    ecfg: EngineConfig,
+    shape: Optional[dict] = None,
+    n_parts: int = 1,
+) -> int:
+    """Measured HBM bytes of the standalone relax-region microprogram
+    at ``ecfg``'s frontier shapes (compiled, fusion-aware walk)."""
+    sh = dict(DEFAULT_SHAPE, **(shape or {}))
+    row_cap, _ = frontier_caps(
+        sh["rows"], sh["width"], sh["n_local"], n_parts,
+        ecfg.frontier_cap,
+    )
+    n_pad = n_parts * sh["n_local"]
+    s = jax.ShapeDtypeStruct
+    fn = jax.jit(_relax_region, static_argnums=(5,))
+    text = fn.lower(
+        s((sh["n_local"] + 1,), jnp.float32),
+        s((row_cap,), jnp.int32),
+        s((sh["rows"],), jnp.int32),
+        s((sh["rows"], sh["width"]), jnp.int32),
+        s((sh["rows"], sh["width"]), jnp.float32),
+        n_pad,
+    ).compile().as_text()
+    return int(hbm_traffic(text)["total_bytes"])
+
+
+def fused_kernel_bytes(
+    row_cap: int, width: int, n_local: int, n_pad: int
+) -> int:
+    """Closed-form HBM bytes of one fused-kernel launch: every tile
+    crosses HBM exactly once (col + wgt tiles per grid step, one
+    row_src word per gather, the resident distance block in, the
+    scatter block out, plus the scalar-prefetch plane)."""
+    words = (
+        row_cap * width * 2   # col + wgt tiles
+        + row_cap             # row_src gathers
+        + (n_local + 1)       # resident distance block, read once
+        + (n_pad + 1)         # output block, one writeback
+        + row_cap + 1         # scalar-prefetch idx plane + count
+    )
+    return 4 * words
+
+
+def superstep_profile(
+    ecfg: EngineConfig,
+    shape: Optional[dict] = None,
+    mesh=None,
+) -> dict:
+    """Op-wise per-superstep HBM/collective profile for ``ecfg``.
+
+    Compiles the engine (the ref variant for fused configs — see the
+    module docstring), restricts the traffic walk to the while body,
+    and reports bytes per superstep plus the fused-kernel adjustment
+    when ``ecfg.relax_impl`` requests fusion."""
+    sh = dict(DEFAULT_SHAPE, **(shape or {}))
+    fused = ecfg.relax_impl.startswith("fused")
+    base = dataclasses.replace(ecfg, relax_impl="ref") if fused else ecfg
+    text, n_parts = engine_step_hlo(base, sh, mesh)
+    within = while_body_computations(text) or None
+    hbm = hbm_traffic(text, within=within)
+    coll = collective_bytes(text, within=within)
+    row_cap, slot_cap = frontier_caps(
+        sh["rows"], sh["width"], sh["n_local"], n_parts,
+        ecfg.frontier_cap,
+    )
+    use_level = ecfg.hierarchy.needs_level
+    xwords = payload_plane_words(slot_cap, use_level, ecfg.payload)
+    prof = {
+        "relax_impl": ecfg.relax_impl,
+        "payload": ecfg.payload,
+        "n_parts": n_parts,
+        "shape": sh,
+        "hbm_bytes_per_superstep": int(hbm["total_bytes"]),
+        "hbm_by_op": hbm["by_op"],
+        "collective_bytes_per_superstep": int(coll["total_bytes"]),
+        "collective_counts": coll["counts"],
+        "exchange_payload_bytes_per_superstep":
+            4 * max(n_parts - 1, 0) * xwords,
+    }
+    if fused:
+        rbytes = relax_region_bytes(ecfg, sh, n_parts)
+        kbytes = fused_kernel_bytes(
+            row_cap, sh["width"], sh["n_local"], n_parts * sh["n_local"]
+        )
+        prof["hbm_bytes_unfused"] = int(hbm["total_bytes"])
+        prof["relax_region_bytes"] = rbytes
+        prof["fused_kernel_bytes"] = kbytes
+        prof["hbm_bytes_per_superstep"] = (
+            max(0, int(hbm["total_bytes"]) - rbytes) + kbytes
+        )
+        prof["hbm_by_op"] = dict(
+            hbm["by_op"], **{"fused_kernel(closed-form)": kbytes}
+        )
+    return prof

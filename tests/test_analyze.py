@@ -196,6 +196,9 @@ def lint_of():
         "kla:2 > chunk:topk:16 /auto",
         "chaotic/a2a",
         "dijkstra/sparse",
+        "delta:5/sparse/fused",
+        "delta:5/sparse/q:bf16",
+        "delta:5/sparse/fused/q:u16",
     ],
 )
 def test_engine_is_lint_clean(lint_of, spec):
@@ -216,6 +219,31 @@ def test_payload_index_capacity():
     assert payload_index_capacity(np.int32) == np.iinfo(np.int32).max
     assert payload_index_capacity(np.uint16) == 65535
     assert payload_index_capacity(jnp.bfloat16) == 1 << 8
+    # the quantized exchange's index plane: u32 addresses any n_local
+    assert payload_index_capacity(np.uint32) == (1 << 32) - 1
+    assert payload_index_capacity("u32") == (1 << 32) - 1
+
+
+def test_quantized_payload_plane_passes_overflow_lint(lint_of):
+    """The u32-plane quantized payload must sail through the
+    payload-overflow and payload-plane jaxpr rules — its index plane
+    is exact and its axis-1 extent is the dtype-parametrized word
+    count, not the f32 planes x slot_cap layout."""
+    for spec in ("delta:5/sparse/q:bf16", "delta:5/sparse/q:u16"):
+        findings = lint_of(spec)
+        assert not [f for f in findings
+                    if f.rule in ("payload-overflow", "payload-plane")]
+
+
+def test_jaxpr_fused_kernel_escape():
+    """A '/fused' spec whose processing is not min-plus silently falls
+    back to the ref relax — the trace-level rule must say so."""
+    cfg = SolverConfig.from_spec("delta:5/sparse/fused").engine_config(
+        get_processing("cc")
+    )
+    fs = lint_engine(cfg, StepShape())
+    assert any(f.rule == "fused-kernel-escape" and f.severity == "warn"
+               for f in fs)
 
 
 def test_payload_capacity_gate():
@@ -309,6 +337,34 @@ def test_spec_check_shape_rules():
         shape=shape,
     )
     assert "frontier-cap-exceeds-rows" in {f.rule for f in fs}
+
+
+def test_spec_check_fused_escape_rules():
+    # dense exchange: the fused kernel only exists on the sparse path
+    fs = check_config("delta:5/a2a/fused")
+    assert any(f.rule == "fused-kernel-escape" and f.severity == "warn"
+               for f in fs)
+    # level-bearing hierarchy: the kernel carries no level plane
+    fs = check_config("kla:2/sparse/fused")
+    assert any(f.rule == "fused-kernel-escape" for f in fs)
+    # the supported point is silent
+    fs = check_config("delta:5/sparse/fused")
+    assert not any(f.severity != "info" for f in fs)
+
+
+def test_spec_check_payload_rules():
+    # quantized + dense exchange: the codec never runs
+    fs = check_config("delta:5/a2a/q:bf16")
+    assert any(f.rule == "payload-quantized-dense" for f in fs)
+    # quantized + non-min reduce is rejected before the engine is
+    fs = check_config(
+        SolverConfig.from_spec("delta:5/sparse/q:u16"),
+        processing="sswp",
+    )
+    assert any(f.rule == "payload-processing" and f.severity == "error"
+               for f in fs)
+    fs = check_config("delta:5/sparse/q:bf16")
+    assert not any(f.severity != "info" for f in fs)
 
 
 def test_solver_config_lint_method():

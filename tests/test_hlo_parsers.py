@@ -98,11 +98,80 @@ ENTRY %main (p0: f32[64]) -> f32[] {
 def test_hbm_traffic_skips_fused_and_reducer_internals():
     r = hbm_traffic(_FUSION_HLO)
     # entry computation only: parameter/constant are free;
-    #   fusion: 256 out + 256 operand = 512
+    #   fusion: 256 out + 256 operand = 512, labeled by its ROOT
     #   reduce: 4 out + 256 + 4 operands = 264
     # the 16 KiB broadcast inside the fused computation never counts
     assert r["total_bytes"] == 512 + 264
-    assert r["by_op"] == {"fusion": 512, "reduce": 264}
+    assert r["by_op"] == {"fusion(multiply)": 512, "reduce": 264}
+
+
+_WHILE_HLO = """\
+HloModule m
+
+%inner_fused (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  ROOT %mul = f32[64]{0} multiply(%p, %p)
+}
+
+%true_br (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  ROOT %t = f32[64]{0} fusion(%p), kind=kLoop, calls=%inner_fused
+}
+
+%false_br (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  ROOT %f = f32[64]{0} negate(%p)
+}
+
+%body (s: (pred[], f32[64])) -> (pred[], f32[64]) {
+  %s = (pred[], f32[64]) parameter(0)
+  %g = pred[] get-tuple-element(%s), index=0
+  %v = f32[64]{0} get-tuple-element(%s), index=1
+  %c = f32[64]{0} conditional(%g, %v, %v), true_computation=%true_br, false_computation=%false_br
+  ROOT %tup = (pred[], f32[64]) tuple(%g, %c)
+}
+
+%cond (s: (pred[], f32[64])) -> pred[] {
+  %s = (pred[], f32[64]) parameter(0)
+  ROOT %g = pred[] get-tuple-element(%s), index=0
+}
+
+ENTRY %main (p0: f32[64]) -> (pred[], f32[64]) {
+  %p0 = f32[64]{0} parameter(0)
+  %setup = f32[64]{0} exponential(%p0)
+  %ptrue = pred[] constant(true)
+  %init = (pred[], f32[64]) tuple(%ptrue, %setup)
+  ROOT %w = (pred[], f32[64]) while(%init), condition=%cond, body=%body
+}
+"""
+
+
+def test_while_body_computations_closure():
+    from repro.roofline.hlo import while_body_computations
+
+    comps = while_body_computations(_WHILE_HLO)
+    # the body, both conditional branches, and the fused computation
+    # called from the true branch are reachable; the cond and the
+    # entry computation are not
+    assert comps == {"body", "true_br", "false_br", "inner_fused"}
+
+
+def test_hbm_traffic_within_filters_setup():
+    from repro.roofline.hlo import while_body_computations
+
+    comps = while_body_computations(_WHILE_HLO)
+    r = hbm_traffic(_WHILE_HLO, within=comps)
+    # hot loop only: the entry's exponential (512 B) and the while op
+    # itself are excluded; the conditional branches count —
+    #   conditional: 256 out + 1 + 256 + 256 operands = 769
+    #   fusion(multiply) in true_br: 256 + 256 = 512
+    #   negate in false_br: 256 + 256 = 512
+    assert "exponential" not in r["by_op"]
+    assert "while" not in r["by_op"]
+    assert r["by_op"]["fusion(multiply)"] == 512
+    assert r["by_op"]["negate"] == 512
+    full = hbm_traffic(_WHILE_HLO)
+    assert full["total_bytes"] > r["total_bytes"]
 
 
 def test_hbm_traffic_counts_unfused_ops():
