@@ -183,6 +183,37 @@ def check_config(
                 "— controller decisions will look ineffective",
             ))
 
+    if cfg.trace:
+        out.append(Finding(
+            "spec", "trace-no-batch", "warn", subject,
+            "/trace solves are unbatchable: the batched engine "
+            "publishes no per-lane superstep windows, so "
+            "solve_batch (and any Router flush of more than one "
+            "distinct source) rejects this spec — trace queries one "
+            "at a time, or drop /trace for serving",
+        ))
+        if cfg.adapt is not None:
+            out.append(Finding(
+                "spec", "trace-adapt-composition", "warn", subject,
+                f"/trace composed with /adapt:{cfg.adapt}: one "
+                "segmentation serves both (the recorder taps the "
+                "controller's windows), but the flight record then "
+                "reflects the RETUNED schedule — per-superstep rows/"
+                "bytes will not match a static solve of this spec's "
+                "tunables; trace without /adapt for the static record",
+            ))
+        if not cfg.collect_metrics:
+            out.append(Finding(
+                "spec", "trace-forces-metrics", "info", subject,
+                "collect_metrics=False with /trace: the segment "
+                "engine always collects per-superstep counters for "
+                "the windows, so the traced WorkMetrics gains the "
+                "work terms (and one collective round per superstep) "
+                "an untraced collect_metrics=False solve omits — "
+                "metrics bit-identity holds only with "
+                "collect_metrics=True",
+            ))
+
     if shape is not None:
         nl, R = int(shape["n_local"]), int(shape["rows"])
         W, Pn = int(shape["width"]), int(shape["n_parts"])
@@ -334,6 +365,14 @@ def explain_config(
             f"(tunes {', '.join(knobs) if knobs else 'nothing'}; "
             "delta/exchange retunes are dynamic scalars, only a "
             "never-seen frontier_cap retraces)"
+        )
+
+    if cfg.trace:
+        lines.append(
+            f"  recorder: /trace runs {cfg.adapt_window}-superstep "
+            "segments purely to publish per-superstep windows "
+            "(pending/eligible/rows/bytes) — bit-identical state and "
+            "metrics, SolveTrace on Solution.trace"
         )
 
     rounds = (3 if cfg.collect_metrics else 2) + (

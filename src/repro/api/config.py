@@ -39,14 +39,19 @@ deltas, repaired to exact final states by the facade), and
 ``/adapt[:policy]`` the runtime controller (``repro.tune``): the
 engine runs in ``adapt_window``-superstep segments and the named
 policy retunes delta / frontier_cap / the sparse-dense choice
-between segments — bare ``/adapt`` means ``/adapt:rho``.  A trailing
+between segments — bare ``/adapt`` means ``/adapt:rho``.  ``/trace``
+turns on the per-superstep flight recorder (``repro.obs``): the solve
+runs through the same segment engine purely to *publish* superstep
+windows — bit-identical state and metrics, with a
+``repro.obs.SolveTrace`` attached to ``Solution.trace``.  A trailing
 partition segment selects the graph relabeling partitioner
 (``repro.graph.partition``)::
 
-    root[+variant][/exchange][/fused][/q[:dtype]][/adapt[:policy]][@partitioner]
+    root[+variant][/exchange][/fused][/q[:dtype]][/adapt[:policy]][/trace][@partitioner]
     "delta:5+threadq/sparse@ebal"
     "delta:5/sparse/adapt:rho"
     "delta:5/sparse/fused/q:bf16"
+    "delta:5/sparse/trace"
     "delta:5 > pod:dijkstra /sparse @shuffle:7"
 
 with partitioner ∈ {block, shuffle[:seed], ebal, degree} (``block``,
@@ -107,6 +112,13 @@ class SolverConfig:
     # supersteps per adaptive segment (controller decision interval);
     # like max_iters it is part of equality but not of ``name``
     adapt_window: int = 4
+    # per-superstep flight recorder (repro.obs): run the solve through
+    # the segment engine purely to publish superstep windows — state
+    # and WorkMetrics stay bit-identical (self-stabilization: the
+    # segmented schedule reaches the same fixpoint), and the collected
+    # repro.obs.SolveTrace is attached to Solution.trace.  Spec
+    # segment: '/trace'.
+    trace: bool = False
 
     def __post_init__(self):
         if self.chunk_size <= 0:
@@ -158,6 +170,13 @@ class SolverConfig:
                 "segmented engine has no repair loop, so final states "
                 "would stay inflated; pick one"
             )
+        if self.payload != "exact" and self.trace:
+            raise ValueError(
+                "quantized payloads (/q:...) do not compose with the "
+                "flight recorder (/trace): the recorder's segmented "
+                "engine has no repair loop, so final states would stay "
+                "inflated; trace the exact spec instead"
+            )
         # canonicalize (validates with a did-you-mean on unknown kinds)
         object.__setattr__(
             self, "partition", canonical_partitioner(self.partition)
@@ -197,7 +216,7 @@ class SolverConfig:
             if not head:
                 raise ValueError(f"empty ordering segment in spec {spec!r}")
             exchange_seen = adapt_seen = False
-            fused_seen = payload_seen = False
+            fused_seen = payload_seen = trace_seen = False
             for seg in segs:
                 if not seg:
                     raise ValueError(
@@ -231,6 +250,18 @@ class SolverConfig:
                             f"dtype in {PAYLOAD_MODES[1:]}"
                         )
                     overrides.setdefault("payload", payload)
+                elif kind == "trace":
+                    if trace_seen:
+                        raise ValueError(
+                            f"duplicate trace segment in spec {spec!r}"
+                        )
+                    if ":" in seg:
+                        raise ValueError(
+                            f"trace segment takes no argument in spec "
+                            f"{spec!r}; use '/trace'"
+                        )
+                    trace_seen = True
+                    overrides.setdefault("trace", True)
                 elif kind == "adapt":
                     if adapt_seen:
                         raise ValueError(
@@ -257,8 +288,9 @@ class SolverConfig:
                     raise ValueError(
                         f"unknown spec segment {seg!r} in {spec!r}: "
                         f"expected an exchange mode {EXCHANGES}, "
-                        "'fused', 'q[:dtype]' or 'adapt[:policy]'"
-                        f"{suggest(kind, tuple(EXCHANGES) + ('fused', 'q', 'adapt'))}"
+                        "'fused', 'q[:dtype]', 'adapt[:policy]' or "
+                        "'trace'"
+                        f"{suggest(kind, tuple(EXCHANGES) + ('fused', 'q', 'adapt', 'trace'))}"
                     )
             rest = head
         if ">" in rest or rest.lower().startswith("global:"):
@@ -290,6 +322,8 @@ class SolverConfig:
             base += f"/q:{self.payload}"
         if self.adapt is not None:
             base += f"/adapt:{self.adapt}"
+        if self.trace:
+            base += "/trace"
         if self.partition != "block":
             base += f"@{self.partition}"
         return base
@@ -323,7 +357,10 @@ class SolverConfig:
             frontier_cap=self.frontier_cap,
             relax_impl=self.relax_impl,
             payload=self.payload,
-            adapt_window=self.adapt_window if self.adapt is not None else 0,
+            adapt_window=(
+                self.adapt_window
+                if (self.adapt is not None or self.trace) else 0
+            ),
         )
 
 

@@ -53,6 +53,8 @@ from repro.core.metrics import WorkMetrics
 from repro.core.processing import ProcessingFn
 from repro.graph.formats import Graph, graph_fingerprint
 from repro.graph.partition import PartitionedGraph, partition_graph
+from repro.obs import trace as obs
+from repro.obs.recorder import FlightRecorder, SolveTrace
 
 # ---------------------------------------------------------------------
 # process-wide engine cache (shared by every Solver and by the legacy
@@ -125,16 +127,23 @@ def compiled_engine(
     try:
         fn = _ENGINE_CACHE[key]
         _ENGINE_CACHE.move_to_end(key)
+        obs.event("engine_cache_hit", exchange=ecfg.exchange,
+                  n_parts=n_parts, batch=batch)
         return fn
     except KeyError:
         pass
-    fn = make_engine(
-        dict(n_parts=n_parts, n_local=n_local),
-        mesh,
-        ecfg,
-        batch=batch,
-        trace_hook=_bump_trace,
-    )
+    obs.event("engine_cache_miss", exchange=ecfg.exchange,
+              n_parts=n_parts, batch=batch)
+    with obs.span("engine.build", exchange=ecfg.exchange,
+                  n_parts=n_parts, n_local=n_local, batch=batch,
+                  adapt_window=ecfg.adapt_window):
+        fn = make_engine(
+            dict(n_parts=n_parts, n_local=n_local),
+            mesh,
+            ecfg,
+            batch=batch,
+            trace_hook=_bump_trace,
+        )
     _ENGINE_CACHE[key] = fn
     if len(_ENGINE_CACHE) > _ENGINE_CACHE_SIZE:
         _ENGINE_CACHE.popitem(last=False)
@@ -302,6 +311,8 @@ class Solution:
     config: SolverConfig
     padded: np.ndarray         # (P, n_local) committed state, padded
     pg: Optional[PartitionedGraph] = None
+    # per-superstep flight record (config.trace / '/trace' specs only)
+    trace: Optional[SolveTrace] = None
 
     @property
     def graph(self):
@@ -378,10 +389,14 @@ class Solver:
         hit = self._pg_cache.get(id(graph))
         if hit is not None and hit[0] is graph and hit[1] == fp:
             self._pg_cache.move_to_end(id(graph))
+            obs.event("partition_memo_hit", n=graph.n)
             return hit[2]
-        pg = partition_graph(
-            graph, self.n_devices, partitioner=self.config.partition
-        )
+        with obs.span("solver.partition", n=graph.n, m=graph.m,
+                      partitioner=self.config.partition,
+                      n_parts=self.n_devices):
+            pg = partition_graph(
+                graph, self.n_devices, partitioner=self.config.partition
+            )
         self._pg_cache[id(graph)] = (graph, fp, pg)
         if len(self._pg_cache) > self._pg_cache_size:
             self._pg_cache.popitem(last=False)
@@ -414,17 +429,25 @@ class Solver:
     # -- solving -------------------------------------------------------
 
     def solve(self, problem: Problem) -> Solution:
-        pg = self.partition(problem.graph)
-        p = problem.processing_fn
-        ecfg = self.config.engine_config(p)
-        D0, T0, L0 = initial_state(pg, p, problem.source_items())
-        if ecfg.adapt_window > 0:
-            return self._solve_adaptive(problem, pg, ecfg, D0, T0, L0)
-        if ecfg.payload != "exact":
-            return self._solve_quantized(problem, pg, ecfg, D0, T0, L0)
-        fn = compiled_engine(self.mesh, ecfg, pg.n_parts, pg.n_local)
-        out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
-        return self._pack(problem, pg, ecfg, *out)
+        with obs.span("solver.solve", spec=self.config.name) as sp:
+            pg = self.partition(problem.graph)
+            p = problem.processing_fn
+            ecfg = self.config.engine_config(p)
+            D0, T0, L0 = initial_state(pg, p, problem.source_items())
+            if ecfg.adapt_window > 0:
+                sol = self._solve_adaptive(problem, pg, ecfg, D0, T0, L0)
+            elif ecfg.payload != "exact":
+                sol = self._solve_quantized(problem, pg, ecfg, D0, T0, L0)
+            else:
+                fn = compiled_engine(
+                    self.mesh, ecfg, pg.n_parts, pg.n_local
+                )
+                with obs.span("solver.engine"):
+                    out = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
+                sol = self._pack(problem, pg, ecfg, *out)
+            sp.set(supersteps=sol.metrics.supersteps,
+                   converged=sol.metrics.converged)
+            return sol
 
     def solve_batch(self, problems: Sequence[Problem]) -> list[Solution]:
         """Solve B same-shaped queries in one engine invocation: state
@@ -458,6 +481,12 @@ class Solver:
                 "restarts per query; use an exact payload for batches "
                 "or solve quantized queries one at a time"
             )
+        if self.config.trace:
+            raise ValueError(
+                "solve_batch does not support the flight recorder "
+                "(/trace): the batched engine publishes no per-lane "
+                "superstep windows; trace queries one at a time"
+            )
         g0 = problems[0].graph
         p = problems[0].processing_fn
         for q in problems[1:]:
@@ -477,7 +506,9 @@ class Solver:
             self.mesh, ecfg, pg.n_parts, pg.n_local, batch=Bpad
         )
         D0, T0, L0 = initial_state_batch(pg, p, items)
-        D, *rest = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
+        with obs.span("solver.solve_batch", spec=self.config.name,
+                      batch=B, batch_padded=Bpad):
+            D, *rest = fn(pg.row_src, pg.col, pg.wgt, D0, T0, L0)
         D = np.asarray(D)  # (P, Bpad, n_local)
         rest = [np.asarray(r) for r in rest]  # each (Bpad,)
         return [
@@ -511,6 +542,10 @@ class Solver:
         increases or deletions can put the fixpoint above the prior
         state, which a monotone engine cannot reach — cold-solve those.
         """
+        with obs.span("solver.resolve", spec=self.config.name) as sp:
+            return self._resolve(prev, new_sources, graph, sp)
+
+    def _resolve(self, prev, new_sources, graph, sp) -> Solution:
         graph = prev.problem.graph if graph is None else graph
         p = prev.problem.processing_fn
         spec = (
@@ -548,7 +583,8 @@ class Solver:
              np.full((pg.n_parts, 1), worst, np.float32)],
             axis=1,
         )
-        T_full = _bootstrap_candidates(pg, p, prev.padded)
+        with obs.span("solver.bootstrap_sweep", m=pg.m):
+            T_full = _bootstrap_candidates(pg, p, prev.padded)
         for v, s, _ in problem.source_items():
             pid = int(pg.padded_id(int(v)))  # owner map: original -> slot
             T_full[pid] = p.reduce(np.float32(T_full[pid]), np.float32(s))
@@ -574,6 +610,12 @@ class Solver:
         # full-graph relaxation done host-side
         sol.metrics.relaxations += pg.m
         sol.metrics.supersteps += 1
+        if sol.trace is not None:
+            # the host sweep has no engine superstep window; count it
+            # so SolveTrace.reconcile still balances against metrics
+            sol.trace.host_sweeps += 1
+        sp.set(supersteps=sol.metrics.supersteps,
+               converged=sol.metrics.converged)
         return sol
 
     # -- internals -----------------------------------------------------
@@ -581,22 +623,33 @@ class Solver:
     def _solve_adaptive(
         self, problem, pg, ecfg: EngineConfig, D0, T0, L0
     ) -> Solution:
-        """Adaptive (``/adapt``) solve: the repro.tune controller runs
+        """Segmented solve: ``/adapt`` (the repro.tune controller runs
         the segmented engine, retuning tunables between segments; a
         fresh policy instance per solve keeps controller state from
-        leaking across queries."""
+        leaking across queries), ``/trace`` (same segment engine under
+        the no-op StaticPolicy, purely to publish superstep windows —
+        the flight recorder collects them into ``Solution.trace``), or
+        both composed."""
         from repro.tune.controller import run_adaptive
-        from repro.tune.policies import make_tune_policy
+        from repro.tune.policies import StaticPolicy, make_tune_policy
 
-        policy = make_tune_policy(self.config.adapt)
-        D, m, report = run_adaptive(
-            self.mesh, ecfg, pg, policy, D0, T0, L0
+        if self.config.adapt is not None:
+            policy = make_tune_policy(self.config.adapt)
+        else:  # pure /trace: observe without intervening
+            policy = StaticPolicy()
+        recorder = (
+            FlightRecorder(self.config.name) if self.config.trace else None
         )
-        st = self._adapt_stats
-        st["solves"] += 1
-        st["segments"] += report.segments
-        st["retraces"] += report.retraces
-        st["cap_growths"] += report.cap_growths
+        D, m, report = run_adaptive(
+            self.mesh, ecfg, pg, policy, D0, T0, L0,
+            on_window=recorder.on_window if recorder is not None else None,
+        )
+        if self.config.adapt is not None:
+            st = self._adapt_stats
+            st["solves"] += 1
+            st["segments"] += report.segments
+            st["retraces"] += report.retraces
+            st["cap_growths"] += report.cap_growths
         padded = np.asarray(D).reshape(pg.n_parts, pg.n_local)
         return Solution(
             state=pg.unpermute(padded.reshape(-1)),
@@ -605,6 +658,7 @@ class Solver:
             config=self.config,
             padded=padded,
             pg=pg,
+            trace=recorder.finish(m) if recorder is not None else None,
         )
 
     def _solve_quantized(
@@ -654,6 +708,7 @@ class Solver:
                 )
                 break
             sweeps += 1
+            obs.event("repair_sweep", sweep=sweeps)
             D0r = np.concatenate(
                 [padded, np.full((pg.n_parts, 1), worst, np.float32)],
                 axis=1,

@@ -50,13 +50,25 @@ class WorkMetrics:
         return dataclasses.asdict(self)
 
     def __str__(self) -> str:
-        return (
+        s = (
             f"classes={self.classes} supersteps={self.supersteps} "
             f"workitems={self.workitems} commits={self.commits} "
             f"relax={self.relaxations} waste={self.waste_ratio():.2f} "
             f"xbytes={self.exchange_bytes}"
-            + ("" if self.converged else " TRUNCATED")
         )
+        # anomaly fields appear only when nonzero: the one-liner stays
+        # short on clean solves but never hides the events an operator
+        # needs to see (dense fallbacks, adaptive retraces, quantized
+        # repairs, capacity-overflow runs)
+        if self.sparse_fallbacks:
+            s += f" sparse_fallbacks={self.sparse_fallbacks}"
+        if self.retraces:
+            s += f" retraces={self.retraces}"
+        if self.repair_sweeps:
+            s += f" repair_sweeps={self.repair_sweeps}"
+        if self.overflow_streak:
+            s += f" overflow_streak={self.overflow_streak}"
+        return s + ("" if self.converged else " TRUNCATED")
 
 
 @dataclasses.dataclass
@@ -100,6 +112,7 @@ class LatencyStats:
     count: int = 0
     total_s: float = 0.0
     mean_s: float = 0.0
+    min_s: float = 0.0
     p50_s: float = 0.0
     p90_s: float = 0.0
     p99_s: float = 0.0
@@ -118,10 +131,36 @@ class LatencyStats:
             count=len(xs),
             total_s=sum(xs),
             mean_s=sum(xs) / len(xs),
+            min_s=xs[0],
             p50_s=rank(50),
             p90_s=rank(90),
             p99_s=rank(99),
             max_s=xs[-1],
+        )
+
+    def merge(self, other: "LatencyStats") -> "LatencyStats":
+        """Combine two windows.  count/total/mean/min/max merge
+        exactly; percentiles are not mergeable from order statistics
+        alone, so the merged percentile is the count-weighted mean of
+        the windows' percentiles — the standard windowed-SLO
+        approximation (exact when the windows are identically
+        distributed)."""
+        if self.count == 0:
+            return dataclasses.replace(other)
+        if other.count == 0:
+            return dataclasses.replace(self)
+        total_n = self.count + other.count
+        def wmean(a: float, b: float) -> float:
+            return (a * self.count + b * other.count) / total_n
+        return LatencyStats(
+            count=total_n,
+            total_s=self.total_s + other.total_s,
+            mean_s=(self.total_s + other.total_s) / total_n,
+            min_s=min(self.min_s, other.min_s),
+            p50_s=wmean(self.p50_s, other.p50_s),
+            p90_s=wmean(self.p90_s, other.p90_s),
+            p99_s=wmean(self.p99_s, other.p99_s),
+            max_s=max(self.max_s, other.max_s),
         )
 
     def as_dict(self) -> dict:

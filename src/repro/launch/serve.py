@@ -68,6 +68,14 @@ def main() -> None:
                     help="streamed improving edge updates to apply "
                          "after the query mix (0 disables)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text exposition on "
+                         "http://127.0.0.1:PORT/metrics (and a JSON "
+                         "/stats) from a daemon thread; 0 picks a "
+                         "free port")
+    ap.add_argument("--stats-text", action="store_true",
+                    help="print the Prometheus text exposition after "
+                         "the run (works without --metrics-port)")
     args = ap.parse_args()
 
     from repro.api import Problem, SingleSource, Solver
@@ -84,6 +92,19 @@ def main() -> None:
     print(f"[serve] {g.name}: n={g.n} m={g.m} spec={solver.config.name} "
           f"devices={solver.n_devices}")
 
+    # live observability: tracer feeds the registry (span histograms +
+    # event counters); --metrics-port exposes it over HTTP
+    registry = server = None
+    if args.metrics_port is not None or args.stats_text:
+        from repro.obs import MetricsRegistry, Tracer, serve_metrics, set_tracer
+
+        registry = MetricsRegistry()
+        set_tracer(Tracer(registry=registry))
+        if args.metrics_port is not None:
+            server = serve_metrics(registry, args.metrics_port)
+            print(f"[serve] metrics: http://{server.server_address[0]}:"
+                  f"{server.server_address[1]}/metrics (+ /stats)")
+
     cache = SolutionCache(byte_budget=args.cache_mb << 20)
     t0 = time.perf_counter()
     lm = LandmarkIndex(solver, g, k=args.landmarks, symmetric=True)
@@ -93,6 +114,26 @@ def main() -> None:
         solver, g, cache=cache, landmarks=lm,
         max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
     )
+    if registry is not None:
+        # callback gauges: the exposition always reads live state
+        registry.gauge("repro_router_queries_total",
+                       help="queries admitted", fn=lambda: router.stats.queries)
+        registry.gauge("repro_router_batches_total",
+                       help="admission flushes", fn=lambda: router.stats.batches)
+        registry.gauge("repro_router_latency_p99_seconds",
+                       help="p99 over the latency ring",
+                       fn=lambda: router.latency_stats().p99_s)
+        registry.gauge("repro_router_latency_p50_seconds",
+                       help="p50 over the latency ring",
+                       fn=lambda: router.latency_stats().p50_s)
+        registry.gauge("repro_cache_hits_total",
+                       help="solution-cache hits", fn=lambda: cache.stats.hits)
+        registry.gauge("repro_cache_misses_total",
+                       help="solution-cache misses",
+                       fn=lambda: cache.stats.misses)
+        registry.gauge("repro_engine_traces_total",
+                       help="process-wide jit traces",
+                       fn=lambda: solver.stats()["engine_cache"]["traces"])
 
     queries = build_query_mix(g, args.queries, args.zipf, args.seed)
     # warm the compile caches outside the timed window (a real service
@@ -143,6 +184,12 @@ def main() -> None:
         print(f"[serve] {checked} refreshed entries verified "
               f"bit-identical to cold solves "
               f"(warm supersteps={warm_total})")
+
+    if args.stats_text and registry is not None:
+        print("[serve] Prometheus exposition:")
+        print(registry.expose())
+    if server is not None:
+        server.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""repro.obs — observability: span tracing, per-superstep flight
+recording, and metrics exposition.
+
+Three layers (see README §Observability):
+
+* :mod:`repro.obs.trace` — low-overhead, thread-safe span tracer
+  instrumented through ``Solver``/``tune``/``serve``; no-op unless a
+  :class:`Tracer` is installed via :func:`use_tracer`.
+* :mod:`repro.obs.recorder` — the ``/trace`` flight recorder: any
+  solve runs through the ``/adapt`` segment engine purely to publish
+  per-superstep windows (bit-identical to the untraced solve), which
+  accumulate into a :class:`SolveTrace` on ``Solution.trace``.
+* :mod:`repro.obs.export` — Chrome-trace/Perfetto JSON, JSONL flight
+  records, and a Prometheus-style :class:`MetricsRegistry` with text
+  exposition (``launch/serve.py --metrics-port``).
+"""
+
+from repro.obs.export import (
+    MetricsRegistry,
+    chrome_trace,
+    flight_jsonl,
+    serve_metrics,
+    write_chrome_trace,
+    write_flight_jsonl,
+)
+from repro.obs.recorder import FlightRecorder, SolveTrace
+from repro.obs.trace import (
+    Event,
+    Span,
+    Tracer,
+    current_tracer,
+    event,
+    set_tracer,
+    span,
+    use_tracer,
+)
+
+__all__ = [
+    "Event",
+    "FlightRecorder",
+    "MetricsRegistry",
+    "SolveTrace",
+    "Span",
+    "Tracer",
+    "chrome_trace",
+    "current_tracer",
+    "event",
+    "flight_jsonl",
+    "serve_metrics",
+    "set_tracer",
+    "span",
+    "use_tracer",
+    "write_chrome_trace",
+    "write_flight_jsonl",
+]

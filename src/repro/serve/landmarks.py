@@ -33,6 +33,7 @@ import numpy as np
 from repro.api import Problem, SingleSource, Solver
 from repro.api.solver import Solution
 from repro.graph.formats import Graph, graph_fingerprint
+from repro.obs import trace as obs
 
 
 @dataclasses.dataclass
@@ -93,10 +94,11 @@ class LandmarkIndex:
             if landmarks is not None
             else pick_landmarks(graph, k)
         )
-        self.solutions: list[Solution] = solver.solve_batch(
-            [Problem(graph, SingleSource(v), processing=processing)
-             for v in self.landmarks]
-        )
+        with obs.span("landmarks.build", k=len(self.landmarks)):
+            self.solutions: list[Solution] = solver.solve_batch(
+                [Problem(graph, SingleSource(v), processing=processing)
+                 for v in self.landmarks]
+            )
         self._rebuild_matrix()
 
     def _rebuild_matrix(self):
@@ -142,21 +144,25 @@ class LandmarkIndex:
         (exact after improving updates); ``warm=False`` cold-solves
         (required after non-improving updates).  Falls back to cold
         per-landmark when the partition layout changed."""
-        if warm:
-            fresh = []
-            for sol in self.solutions:
-                try:
-                    fresh.append(self.solver.resolve(sol, graph=self.graph))
-                except ValueError:  # partition layout changed
-                    warm = False
-                    break
+        with obs.span("landmarks.refresh", k=self.k, warm=warm) as sp:
             if warm:
-                self.solutions = fresh
-        if not warm:
-            self.solutions = self.solver.solve_batch(
-                [Problem(self.graph, SingleSource(v),
-                         processing=self.processing)
-                 for v in self.landmarks]
-            )
+                fresh = []
+                for sol in self.solutions:
+                    try:
+                        fresh.append(
+                            self.solver.resolve(sol, graph=self.graph)
+                        )
+                    except ValueError:  # partition layout changed
+                        warm = False
+                        break
+                if warm:
+                    self.solutions = fresh
+            if not warm:
+                self.solutions = self.solver.solve_batch(
+                    [Problem(self.graph, SingleSource(v),
+                             processing=self.processing)
+                     for v in self.landmarks]
+                )
+            sp.set(warm_used=warm)
         self._rebuild_matrix()
         return self

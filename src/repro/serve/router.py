@@ -43,12 +43,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import TYPE_CHECKING, Callable, Optional, Sequence
 
 from repro.api import Problem, SingleSource, Solver
 from repro.api.solver import Solution
 from repro.core.metrics import LatencyStats
 from repro.graph.formats import Graph, graph_fingerprint
+from repro.obs import trace as obs
 from repro.serve.cache import SolutionCache
 from repro.serve.landmarks import LandmarkIndex
 
@@ -86,12 +88,18 @@ class Answer:
 class Ticket:
     """Handle for a submitted query; resolved at flush time.  Calling
     :meth:`result` before the batch filled forces a flush (a caller
-    blocking on its answer is the ultimate latency trigger)."""
+    blocking on its answer is the ultimate latency trigger).  ``qid``
+    is the router-assigned correlation key: the submit event, the
+    flush span that served the ticket, and the solve spans under it
+    all carry it, so a p99 outlier can be traced to its batch and
+    spec."""
 
-    def __init__(self, router: "Router", query: Query, t_submit: float):
+    def __init__(self, router: "Router", query: Query, t_submit: float,
+                 qid: int = 0):
         self._router = router
         self.query = query
         self.t_submit = t_submit
+        self.qid = qid
         self.answer: Optional[Answer] = None
 
     @property
@@ -113,6 +121,7 @@ class RouterStats:
     landmark_served: int = 0
     escalations: int = 0        # estimate queries the index couldn't bound
     tuned_batches: int = 0      # flushes served by a tuned-spec solver
+    latency_evictions: int = 0  # samples aged out of the latency ring
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -130,9 +139,14 @@ class Router:
         max_batch: int = 8,
         max_wait_s: float = 0.01,
         clock: Callable[[], float] = time.monotonic,
+        latency_window: int = 1024,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be positive: {max_batch}")
+        if latency_window < 1:
+            raise ValueError(
+                f"latency_window must be positive: {latency_window}"
+            )
         self.solver = solver
         self.graph = graph
         self.cache = cache if cache is not None else SolutionCache()
@@ -144,18 +158,37 @@ class Router:
         self.stats = RouterStats()
         self._pending: list[Ticket] = []
         self._tuned_solvers: dict = {}  # tuned spec -> memoized Solver
+        # bounded ring of recent per-answer latencies: stats() summaries
+        # stay O(window) however long the router lives; ring overflow is
+        # counted, not silent
+        self._latency: deque = deque(maxlen=int(latency_window))
+        self._qids = 0
 
     # -- admission ----------------------------------------------------
 
     def submit(self, query: Query) -> Ticket:
-        ticket = Ticket(self, query, self.clock())
+        self._qids += 1
+        ticket = Ticket(self, query, self.clock(), qid=self._qids)
         self.stats.queries += 1
+        obs.event("router.submit", qid=ticket.qid, source=query.source,
+                  exact=query.exact)
         if self._try_landmark(ticket):
             return ticket
         self._pending.append(ticket)
         if self._distinct_misses() >= self.max_batch:
             self.flush()
         return ticket
+
+    def _record_latency(self, latency_s: float) -> None:
+        if len(self._latency) == self._latency.maxlen:
+            self.stats.latency_evictions += 1
+        self._latency.append(float(latency_s))
+
+    def latency_stats(self) -> LatencyStats:
+        """Order statistics over the retained latency ring (at most
+        ``latency_window`` recent answers; older samples are evicted
+        and counted in ``stats.latency_evictions``)."""
+        return LatencyStats.from_samples(self._latency)
 
     def pump(self) -> bool:
         """The latency trigger: flush if the oldest pending query has
@@ -184,60 +217,68 @@ class Router:
         if not tickets:
             return 0
         self.stats.batches += 1
-        fp = graph_fingerprint(self.graph)
-        solver = self._solver_for(fp)
-        if solver is not self.solver:
-            self.stats.tuned_batches += 1
-        cfg_name = solver.config.name
+        with obs.span("router.flush", batch=len(tickets),
+                      qids=[t.qid for t in tickets]) as sp:
+            fp = graph_fingerprint(self.graph)
+            solver = self._solver_for(fp)
+            if solver is not self.solver:
+                self.stats.tuned_batches += 1
+            cfg_name = solver.config.name
+            sp.set(spec=cfg_name, tuned=solver is not self.solver)
 
-        # one solution per distinct (source, processing); cache first
-        need: dict = {}
-        sols: dict = {}
-        hit: dict = {}
-        for t in tickets:
-            q = t.query
-            skey = (q.source, q.processing)
-            if skey in sols or skey in need:
-                continue
-            ckey = SolutionCache.key_for(fp, q.source, cfg_name,
-                                         q.processing)
-            cached = self.cache.get(ckey)
-            if cached is not None:
-                sols[skey] = cached
-                hit[skey] = True
-            else:
-                need[skey] = ckey
-        for group in self._by_processing(need):
-            problems = [
-                Problem(self.graph, SingleSource(src), processing=proc)
-                for (src, proc) in group
-            ]
-            if solver.config.adapt is not None and len(problems) > 1:
-                # adaptive solves are unbatchable (segmented engine);
-                # serve the flush sequentially instead
-                solved = [solver.solve(pb) for pb in problems]
-            else:
-                solved = solver.solve_batch(problems)
-            self.stats.batched_solves += len(solved)
-            for (skey, sol) in zip(group, solved):
-                self.cache.put(need[skey], sol)
-                sols[skey] = sol
-                hit[skey] = False
+            # one solution per distinct (source, processing); cache first
+            need: dict = {}
+            sols: dict = {}
+            hit: dict = {}
+            for t in tickets:
+                q = t.query
+                skey = (q.source, q.processing)
+                if skey in sols or skey in need:
+                    continue
+                ckey = SolutionCache.key_for(fp, q.source, cfg_name,
+                                             q.processing)
+                cached = self.cache.get(ckey)
+                if cached is not None:
+                    sols[skey] = cached
+                    hit[skey] = True
+                else:
+                    need[skey] = ckey
+            for group in self._by_processing(need):
+                problems = [
+                    Problem(self.graph, SingleSource(src), processing=proc)
+                    for (src, proc) in group
+                ]
+                if solver.config.adapt is not None and len(problems) > 1:
+                    # adaptive solves are unbatchable (segmented engine);
+                    # serve the flush sequentially instead
+                    solved = [solver.solve(pb) for pb in problems]
+                else:
+                    solved = solver.solve_batch(problems)
+                self.stats.batched_solves += len(solved)
+                for (skey, sol) in zip(group, solved):
+                    self.cache.put(need[skey], sol)
+                    sols[skey] = sol
+                    hit[skey] = False
+                    obs.event("router.cache_fill", source=skey[0],
+                              bytes=sol.nbytes)
+            sp.set(cache_hits=sum(1 for h in hit.values() if h),
+                   solved=len(need))
 
-        now = self.clock()
-        for t in tickets:
-            q = t.query
-            sol = sols[(q.source, q.processing)]
-            t.answer = Answer(
-                query=q,
-                distance=(sol.distance_to(q.target)
-                          if q.target is not None else None),
-                solution=sol,
-                served_by=("cache" if hit[(q.source, q.processing)]
-                           else "batch"),
-                latency_s=now - t.t_submit,
-            )
-        return len(tickets)
+            now = self.clock()
+            for t in tickets:
+                q = t.query
+                sol = sols[(q.source, q.processing)]
+                t.answer = Answer(
+                    query=q,
+                    distance=(sol.distance_to(q.target)
+                              if q.target is not None else None),
+                    solution=sol,
+                    served_by=("cache" if hit[(q.source, q.processing)]
+                               else "batch"),
+                    latency_s=now - t.t_submit,
+                )
+                self._record_latency(t.answer.latency_s)
+            return len(tickets)
 
     # -- internals ----------------------------------------------------
 
@@ -267,8 +308,12 @@ class Router:
         est = self.landmarks.estimate(q.source, q.target)
         if not est.servable:
             self.stats.escalations += 1
+            obs.event("router.landmark_escalation", qid=ticket.qid,
+                      source=q.source, target=q.target)
             return False  # escalate to the exact path
         self.stats.landmark_served += 1
+        obs.event("router.landmark_served", qid=ticket.qid,
+                  source=q.source, target=q.target)
         ticket.answer = Answer(
             query=q,
             distance=est.upper,
@@ -278,6 +323,7 @@ class Router:
             lower=est.lower,
             upper=est.upper,
         )
+        self._record_latency(ticket.answer.latency_s)
         return True
 
     def _distinct_misses(self) -> int:

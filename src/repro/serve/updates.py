@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.api import Problem, SingleSource, Solver
 from repro.graph.formats import Graph, chain_fingerprint, graph_fingerprint
+from repro.obs import trace as obs
 from repro.serve.cache import SolutionCache
 from repro.serve.landmarks import LandmarkIndex
 
@@ -123,6 +124,16 @@ class UpdateFeed:
     # -- the one entry point ------------------------------------------
 
     def apply(self, upd: EdgeUpdate) -> UpdateResult:
+        with obs.span("feed.apply", src=upd.src, dst=upd.dst,
+                      delete=upd.delete) as sp:
+            res = self._apply(upd)
+            sp.set(improving=res.improving, inserted=res.inserted,
+                   warm_refreshes=res.warm_refreshes,
+                   cold_refreshes=res.cold_refreshes,
+                   invalidated=res.invalidated)
+            return res
+
+    def _apply(self, upd: EdgeUpdate) -> UpdateResult:
         g = self.graph
         fp_old = graph_fingerprint(g)
         u, v, w = int(upd.src), int(upd.dst), float(upd.weight)
@@ -177,6 +188,14 @@ class UpdateFeed:
         entries = self.cache.entries_for(fp_old)
         if not entries:
             return
+        with obs.span("feed.refresh_cache", entries=len(entries),
+                      improving=improving, policy=self.refresh):
+            self._refresh_cache_entries(
+                fp_old, fp_new, improving, res, entries
+            )
+
+    def _refresh_cache_entries(self, fp_old, fp_new, improving,
+                               res: UpdateResult, entries):
         if self.refresh == "lazy" or not improving:
             res.invalidated = self.cache.invalidate_graph(fp_old)
             self.stats.invalidated += res.invalidated
@@ -212,6 +231,7 @@ class UpdateFeed:
                 # partition layout changed (data-dependent partitioner
                 # moved its boundaries) — warm start is unsound, fall
                 # back to a cold solve
+                obs.event("feed.warm_fallback", source=key[1])
                 sol = self.solver.solve(Problem(
                     self.graph, SingleSource(key[1]), processing=key[3],
                 ))
